@@ -1,0 +1,88 @@
+"""End-to-end LM training driver with the long-tail controller (beyond-paper
+generalisation, DESIGN.md §2): pilot run fits the h(r) regression on the
+loss curve; the main run early-stops at a desired fraction of final quality.
+
+Uses a ~20M-parameter dense transformer (the CPU-friendly stand-in for the
+assignment's "~100M for a few hundred steps"; pass --big for ~100M).
+
+    PYTHONPATH=src python examples/train_lm_earlystop.py --steps 150
+"""
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.configs.base import ArchConfig
+from repro.training import Trainer, TrainConfig, OptimizerConfig
+
+
+def make_cfg(big: bool) -> ArchConfig:
+    if big:   # ~100M — the assignment's e2e scale; several hours on 1 CPU core
+        return ArchConfig(name="demo-100m", family="dense", n_layers=12,
+                          d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+                          d_ff=2048, vocab=32_000, period=("attn",),
+                          remat="none")
+    # CPU-demo scale: converges visibly in ~150 steps (the long tail exists)
+    return ArchConfig(name="demo-3m", family="dense", n_layers=6,
+                      d_model=192, n_heads=6, n_kv_heads=3, head_dim=32,
+                      d_ff=768, vocab=512, period=("attn",), remat="none")
+
+
+def data(cfg, batch, seq, seed=0):
+    """Ramp stream (next token = current + 1): quickly learnable, so the
+    loss curve shows a clear long tail to cut."""
+    rng = np.random.default_rng(seed)
+    while True:
+        start = rng.integers(0, cfg.vocab, size=(batch, 1))
+        yield {"tokens": jnp.asarray((start + np.arange(seq)) % cfg.vocab,
+                                     jnp.int32)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=250)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--big", action="store_true")
+    ap.add_argument("--desired-quality", type=float, default=0.95)
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.big)
+    from repro.models import count_params
+    print(f"model: {cfg.name} ({count_params(cfg)/1e6:.1f}M params)")
+    tc = TrainConfig(opt=OptimizerConfig(peak_lr=5e-3, warmup_steps=10,
+                                         total_steps=args.steps))
+
+    # --- pilot: run to the budget, harvest (quality r, change-rate h) ---
+    print(f"pilot run ({args.steps} steps)…")
+    pilot = Trainer(cfg, tc, data(cfg, args.batch, args.seq), seed=1)
+    pilot.run(args.steps)
+    losses = np.array([m["loss"] for m in pilot.metrics_log])
+    first, final = losses[:3].mean(), losses[-5:].mean()
+    ema = 0.95
+    r, h = core.harvest_lm_trace(losses, ema=ema)   # same EMA as the hook
+    model = core.fit_longtail([(r, h)], algorithm="lm_train",
+                              dataset="ramp", family=None, balanced=True)
+    print(f"pilot: loss {first:.3f} → {final:.3f}; regression "
+          f"({model.regression.family}) R² = {model.regression.metrics.r2:.3f}")
+
+    # --- main run: early-stop at the desired quality fraction ---
+    hook = core.EarlyStopHook(model, desired_accuracy=args.desired_quality,
+                              ema=ema, patience=5,
+                              min_steps=max(20, args.steps // 5))
+    print(f"main run with h* = {hook.h_star:.3e} "
+          f"(desired quality {args.desired_quality:.0%})…")
+    main_t = Trainer(cfg, tc, data(cfg, args.batch, args.seq),
+                     earlystop=hook, seed=1)
+    rep = main_t.run(args.steps)
+    stopped_loss = main_t.metrics_log[-1]["loss"]
+    progress = (first - stopped_loss) / max(first - final, 1e-9)
+    print(f"stopped at step {rep['final_step']}/{args.steps} "
+          f"(early={rep['stopped_early']}), loss {stopped_loss:.3f} "
+          f"→ realised {progress:.0%} of the pilot's improvement "
+          f"for {rep['final_step'] / args.steps:.0%} of the compute")
+
+
+if __name__ == "__main__":
+    main()

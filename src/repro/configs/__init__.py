@@ -1,0 +1,2 @@
+from .base import ArchConfig, MoEConfig, MambaConfig, get_config, list_archs
+from .shapes import SHAPES, ShapeConfig, applicable, cells

@@ -1,0 +1,4 @@
+"""Import side-effect module: registers every assigned architecture."""
+from . import (llama4_scout_17b_a16e, qwen3_moe_30b_a3b, gemma3_12b,
+               mistral_nemo_12b, qwen2_7b, qwen3_8b, xlstm_350m,
+               hubert_xlarge, jamba_v01_52b, llama_3_2_vision_11b)  # noqa: F401

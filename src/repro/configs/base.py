@@ -1,0 +1,146 @@
+"""Architecture config schema + registry.
+
+Every assigned architecture is a frozen ``ArchConfig``; heterogeneous layer
+stacks are expressed as a *period* — a tuple of layer kinds repeated
+``n_layers / len(period)`` times (DESIGN.md §3: period-scanned stacks).
+Layer kinds: "attn" | "attn_local" | "attn_global" | "cross" | "mamba" |
+"mlstm" | "slstm".
+
+``reduced()`` returns the same family at smoke-test scale (small width/depth,
+few experts) — per the assignment, FULL configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    shared_expert: bool = False
+    # which period positions get MoE instead of dense MLP (None = all)
+    period_mask: tuple[bool, ...] | None = None
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int                      # dense-MLP intermediate (0 = no FFN)
+    vocab: int
+    period: tuple[str, ...] = ("attn",)
+    moe: MoEConfig | None = None
+    mamba: MambaConfig | None = None
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    rope_theta_global: float | None = None    # gemma3: 1M for global layers
+    sliding_window: int | None = None
+    encoder_only: bool = False
+    cross_attn_tokens: int = 0     # vlm: image tokens fed to cross layers
+    cross_norm_kv: bool = True
+    embeddings_input: bool = False  # audio/vlm stub frontend: inputs are [B,S,D]
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    use_flash_kernel: bool = False
+    # xLSTM projection factors + chunkwise-parallel mLSTM (0 = sequential;
+    # §Perf hillclimb #1 sets 128 — identical math, ≈L× less state traffic)
+    xlstm_mlstm_proj: float = 2.0
+    xlstm_slstm_proj: float = 4.0 / 3.0
+    xlstm_chunk: int = 0
+    # ring-buffer KV caches sized to the window for attn_local layers
+    # (§Perf hillclimb #3; exact — window attention never looks further back)
+    windowed_local_cache: bool = True
+    # MoE dispatch groups (§Perf hillclimb #2): 0 = one global sort/scatter;
+    # G > 1 = per-group local dispatch (align G with the DP shard count) so
+    # token→expert routing becomes a buffer all-to-all instead of token
+    # all-gathers.  Capacity is enforced per group (GShard-style).
+    moe_dispatch_groups: int = 0
+    # activation dtype for train/serve
+    dtype: str = "bfloat16"
+    # training-stability / loop knobs carried with the arch
+    remat: str = "period"          # "none" | "period"
+    sub_quadratic: bool = False    # eligible for long_500k decode
+
+    def __post_init__(self):
+        if self.n_layers % len(self.period):
+            raise ValueError(f"{self.name}: n_layers {self.n_layers} not a "
+                             f"multiple of period {len(self.period)}")
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.period)
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def moe_at(self, period_pos: int) -> bool:
+        if self.moe is None:
+            return False
+        if self.moe.period_mask is None:
+            return True
+        return self.moe.period_mask[period_pos]
+
+    def has_ffn_at(self, period_pos: int) -> bool:
+        kind = self.period[period_pos]
+        if kind in ("mlstm", "slstm"):
+            return False             # xLSTM FFN lives inside the block
+        return self.d_ff > 0 or self.moe_at(period_pos)
+
+    # ---- analytics ----
+    def param_count(self) -> int:
+        """Exact parameter count from the initialiser structure (see zoo)."""
+        from repro.models.model_zoo import count_params
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model_zoo import count_params
+        return count_params(self, active_only=True)
+
+
+_REGISTRY: dict[str, Callable[[], ArchConfig]] = {}
+_REDUCED: dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register(name: str, full: Callable[[], ArchConfig],
+             reduced: Callable[[], ArchConfig]):
+    _REGISTRY[name] = full
+    _REDUCED[name] = reduced
+
+
+def get_config(name: str, reduced: bool = False) -> ArchConfig:
+    _ensure_imported()
+    table = _REDUCED if reduced else _REGISTRY
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(table)}")
+    return table[name]()
+
+
+def list_archs() -> list[str]:
+    _ensure_imported()
+    return sorted(_REGISTRY)
+
+
+def _ensure_imported():
+    from repro.configs import archs  # noqa: F401  (registers on import)

@@ -1,0 +1,30 @@
+"""Gemma-3-12B: dense decoder, 5:1 local(1024-window):global, qk-norm.
+
+[hf:google/gemma-3; unverified] — 48L d3840 16H kv8 head_dim 256 d_ff 15360
+vocab 262144; local RoPE θ=10k, global θ=1M.  Sub-quadratic enough for
+long_500k: 40/48 layers have a 1024-token window (DESIGN §5).
+"""
+from .base import ArchConfig, register
+
+_PERIOD = ("attn_local",) * 5 + ("attn_global",)
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="gemma3-12b", family="dense", n_layers=48,
+        d_model=3840, n_heads=16, n_kv_heads=8, head_dim=256, d_ff=15_360,
+        vocab=262_144, period=_PERIOD, qk_norm=True,
+        sliding_window=1024, rope_theta=10_000.0,
+        rope_theta_global=1_000_000.0, sub_quadratic=True)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="gemma3-12b-reduced", family="dense", n_layers=6,
+        d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        vocab=256, period=_PERIOD, qk_norm=True,
+        sliding_window=16, rope_theta=10_000.0,
+        rope_theta_global=1_000_000.0, sub_quadratic=True, remat="none")
+
+
+register("gemma3-12b", full, reduced)

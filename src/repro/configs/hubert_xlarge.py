@@ -1,0 +1,27 @@
+"""HuBERT-XLarge: bidirectional audio encoder, masked-prediction objective.
+
+[arXiv:2106.07447; unverified] — 48L d1280 16H kv16 head_dim 80 d_ff 5120
+vocab 504 (cluster targets).  The conv feature extractor is a STUB per the
+assignment: input_specs() supplies precomputed frame embeddings [B,S,1280].
+Encoder-only → no decode shapes; RoPE disabled (conv positional stub).
+"""
+from .base import ArchConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="hubert-xlarge", family="audio", n_layers=48,
+        d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80, d_ff=5120,
+        vocab=504, period=("attn",), encoder_only=True,
+        embeddings_input=True, rope_theta=-1.0)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="hubert-xlarge-reduced", family="audio", n_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+        vocab=32, period=("attn",), encoder_only=True,
+        embeddings_input=True, rope_theta=-1.0, remat="none")
+
+
+register("hubert-xlarge", full, reduced)

@@ -1,0 +1,36 @@
+"""Jamba-v0.1-52B: hybrid Mamba+attention (1:7), MoE 16e top-2 every other layer.
+
+[arXiv:2403.19887; hf] — 32L d4096 32H kv8 head_dim 128 d_ff 14336
+vocab 65536; Mamba d_state 16, conv 4, expand 2; attention at period index 3;
+no positional encoding (Mamba provides order).  Sub-quadratic: only 4/32
+layers carry a KV cache → runs long_500k.
+"""
+from .base import ArchConfig, MoEConfig, MambaConfig, register
+
+_PERIOD = ("mamba", "mamba", "mamba", "attn", "mamba", "mamba", "mamba", "mamba")
+_MOE_MASK = (False, True) * 4
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="jamba-v0.1-52b", family="hybrid", n_layers=32,
+        d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128, d_ff=14_336,
+        vocab=65_536, period=_PERIOD,
+        moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=14_336,
+                      period_mask=_MOE_MASK),
+        mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+        rope_theta=-1.0, sub_quadratic=True)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="jamba-v0.1-52b-reduced", family="hybrid", n_layers=8,
+        d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        vocab=256, period=_PERIOD,
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=128,
+                      period_mask=_MOE_MASK),
+        mamba=MambaConfig(d_state=8, d_conv=4, expand=2),
+        rope_theta=-1.0, sub_quadratic=True, remat="none")
+
+
+register("jamba-v0.1-52b", full, reduced)

@@ -1,0 +1,30 @@
+"""Llama-4-Scout-17B-16E: MoE decoder, 16 routed experts top-1 + shared.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified] — 48L d5120 40H kv8
+d_ff_expert 8192, vocab 202048.  Config assumptions in DESIGN.md §6
+(head_dim 128, shared expert, RoPE on all layers).
+"""
+from .base import ArchConfig, MoEConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="llama4-scout-17b-a16e", family="moe", n_layers=48,
+        d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128, d_ff=8192,
+        vocab=202_048, period=("attn",),
+        moe=MoEConfig(n_experts=16, top_k=1, d_ff_expert=8192,
+                      shared_expert=True),
+        rope_theta=500_000.0)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="llama4-scout-17b-a16e-reduced", family="moe", n_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        vocab=256, period=("attn",),
+        moe=MoEConfig(n_experts=4, top_k=1, d_ff_expert=128,
+                      shared_expert=True),
+        rope_theta=500_000.0, remat="none")
+
+
+register("llama4-scout-17b-a16e", full, reduced)

@@ -1,0 +1,29 @@
+"""Llama-3.2-Vision-11B: text decoder with gated cross-attention image layers.
+
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified] — 40L d4096 32H kv8
+head_dim 128 d_ff 14336 vocab 128256; cross-attention every 5th layer
+(8 of 40), tanh-gated; the vision tower is a STUB — input_specs() supplies
+1601 precomputed patch embeddings per image.
+"""
+from .base import ArchConfig, register
+
+_PERIOD = ("attn", "attn", "attn", "attn", "cross")
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="llama-3.2-vision-11b", family="vlm", n_layers=40,
+        d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128, d_ff=14_336,
+        vocab=128_256, period=_PERIOD, cross_attn_tokens=1601,
+        rope_theta=500_000.0)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="llama-3.2-vision-11b-reduced", family="vlm", n_layers=5,
+        d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        vocab=256, period=_PERIOD, cross_attn_tokens=16,
+        rope_theta=500_000.0, remat="none")
+
+
+register("llama-3.2-vision-11b", full, reduced)

@@ -1,0 +1,26 @@
+"""Qwen3-30B-A3B: MoE decoder, 128 experts top-8, qk-norm.
+
+[hf:Qwen/Qwen3-30B-A3B; hf] — 48L d2048 32H kv4 d_ff_expert 768 vocab 151936.
+"""
+from .base import ArchConfig, MoEConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-moe-30b-a3b", family="moe", n_layers=48,
+        d_model=2048, n_heads=32, n_kv_heads=4, head_dim=128, d_ff=0,
+        vocab=151_936, period=("attn",), qk_norm=True,
+        moe=MoEConfig(n_experts=128, top_k=8, d_ff_expert=768),
+        rope_theta=1_000_000.0)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-moe-30b-a3b-reduced", family="moe", n_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=0,
+        vocab=256, period=("attn",), qk_norm=True,
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=64),
+        rope_theta=1_000_000.0, remat="none")
+
+
+register("qwen3-moe-30b-a3b", full, reduced)

@@ -1,0 +1,39 @@
+"""Assigned input shapes (4 per architecture → 40 cells) + applicability."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k":    ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg, shape: ShapeConfig) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) per the assignment's skip rules."""
+    if cfg.encoder_only and shape.kind == "decode":
+        return False, "encoder-only: no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: 500k decode skipped (DESIGN §5)"
+    return True, ""
+
+
+def cells(archs: list) -> list[tuple]:
+    """All (arch_cfg, shape) cells with applicability flags."""
+    out = []
+    for cfg in archs:
+        for shape in SHAPES.values():
+            ok, why = applicable(cfg, shape)
+            out.append((cfg, shape, ok, why))
+    return out

@@ -1,0 +1,26 @@
+"""xLSTM-350M: recurrent (7 mLSTM : 1 sLSTM per period), no separate FFN.
+
+[arXiv:2405.04517; unverified] — 24L d1024 4H vocab 50304; d_ff=0 means the
+projections live inside the blocks (mLSTM ×2.0, sLSTM post-FFN ×4/3).
+O(1) state → runs long_500k.
+"""
+from .base import ArchConfig, register
+
+_PERIOD = ("mlstm",) * 7 + ("slstm",)
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="xlstm-350m", family="ssm", n_layers=24,
+        d_model=1024, n_heads=4, n_kv_heads=4, head_dim=256, d_ff=0,
+        vocab=50_304, period=_PERIOD, sub_quadratic=True)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="xlstm-350m-reduced", family="ssm", n_layers=8,
+        d_model=64, n_heads=4, n_kv_heads=4, head_dim=16, d_ff=0,
+        vocab=256, period=_PERIOD, sub_quadratic=True, remat="none")
+
+
+register("xlstm-350m", full, reduced)

@@ -1,0 +1,166 @@
+"""The paper's contribution as a reusable control layer.
+
+``LongTailModel`` packages the offline-trained regression:  set a desired
+accuracy r*, get the change-rate threshold h* = f(r*), and stop the iterative
+process the first time  h_i = |J_i − J_{i−1}|/|J_{i−1}| ≤ h*  (§4).
+
+Two consumers:
+  · the distributed clustering engine — the predicate runs **on device**
+    inside ``jax.lax.while_loop`` (no host round-trip per iteration);
+  · the LM training loop (beyond-paper generalisation) — ``EarlyStopHook``
+    EMA-smooths the noisy SGD loss before applying the same rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .regression import RegressionModel, FitMetrics, select_model, pool_traces
+
+
+def change_rate(j_curr, j_prev, eps: float = 1e-30):
+    """h_i = |J_i − J_{i−1}| / |J_{i−1}|   (Eq. 7). Safe at J≈0."""
+    return jnp.abs(j_curr - j_prev) / jnp.maximum(jnp.abs(j_prev), eps)
+
+
+@dataclasses.dataclass(frozen=True)
+class LongTailModel:
+    """Fitted h(r) regression + provenance, serialisable for reuse (§5.4:
+
+    the training process runs once; the regression is applied repeatedly)."""
+    regression: RegressionModel
+    algorithm: str                  # "kmeans" | "em" | "lm_train" | ...
+    dataset: str
+    n_train_groups: int
+    comparison: dict | None = None  # {family: FitMetrics} from model selection
+
+    def threshold_for(self, desired_accuracy: float) -> float:
+        return self.regression.threshold_for(desired_accuracy)
+
+    # ---- persistence (tiny JSON artifacts, checkpointed with the run) ----
+    def to_json(self) -> str:
+        d = {
+            "family": self.regression.family,
+            "coeffs": list(self.regression.coeffs),
+            "metrics": dataclasses.asdict(self.regression.metrics),
+            "algorithm": self.algorithm,
+            "dataset": self.dataset,
+            "n_train_groups": self.n_train_groups,
+        }
+        if self.comparison is not None:
+            d["comparison"] = {k: dataclasses.asdict(v) for k, v in self.comparison.items()}
+        return json.dumps(d, indent=2)
+
+    @staticmethod
+    def from_json(s: str) -> "LongTailModel":
+        d = json.loads(s)
+        reg = RegressionModel(family=d["family"], coeffs=tuple(d["coeffs"]),
+                              metrics=FitMetrics(**d["metrics"]))
+        comparison = None
+        if "comparison" in d:
+            comparison = {k: FitMetrics(**v) for k, v in d["comparison"].items()}
+        return LongTailModel(regression=reg, algorithm=d["algorithm"],
+                             dataset=d["dataset"],
+                             n_train_groups=d["n_train_groups"],
+                             comparison=comparison)
+
+
+def fit_longtail(traces: Sequence[tuple[np.ndarray, np.ndarray]], *,
+                 algorithm: str, dataset: str, family: str | None = None,
+                 balanced: bool = False) -> LongTailModel:
+    """Pool (r, h) traces from the training groups and fit the regression.
+
+    ``family=None`` runs the paper's model-selection comparison and keeps the
+    winner; passing e.g. ``"quadratic"`` pins the paper's default.
+    ``balanced=True`` applies the r-binned geometric-mean aggregation before
+    fitting (beyond-paper robustification — see regression.balance_cloud).
+    """
+    r, h = pool_traces(traces)
+    if balanced:
+        from .regression import balance_cloud
+        r, h = balance_cloud(r, h)
+    if family is None:
+        best, table = select_model(r, h)
+    else:
+        from .regression import fit_family
+        best, table = fit_family(r, h, family), None
+    return LongTailModel(regression=best, algorithm=algorithm, dataset=dataset,
+                         n_train_groups=len(traces), comparison=table)
+
+
+def harvest_lm_trace(losses, ema: float = 0.95):
+    """(r, h) pairs from a pilot run's loss curve, using EXACTLY the EMA
+    recurrence EarlyStopHook applies online — so the fitted threshold lives
+    on the same scale the hook will compare against.
+
+    r_i = (s₀ − s_i) / (s₀ − s_final): relative progress of the smoothed
+    objective toward its final value (the LM analogue of Rand accuracy).
+    """
+    losses = np.asarray(losses, np.float64)
+    s = np.empty_like(losses)
+    s[0] = losses[0]
+    for i in range(1, losses.size):
+        s[i] = ema * s[i - 1] + (1 - ema) * losses[i]
+    # Eq. 7 anchored at J₀ instead of J_{i−1}: CE losses converge toward ~0,
+    # where the relative-to-current rate stays constant under exponential
+    # decay and never signals the tail.  Anchoring keeps h ↓ 0 as absolute
+    # progress stalls (documented LM adaptation, DESIGN.md §2).
+    h = np.abs(np.diff(s)) / max(abs(s[0]), 1e-30)
+    denom = max(s[0] - s[-1], 1e-9)
+    r = np.clip((s[0] - s[1:]) / denom, 0.0, 1.0)
+    return r, h
+
+
+class EarlyStopHook:
+    """Host-side controller for noisy iterative objectives (LM training).
+
+    SGD loss is not monotone per step, so the raw Eq. 7 signal is useless at
+    step granularity.  We EMA both the objective and its change rate and
+    require ``patience`` consecutive sub-threshold readings — a documented
+    deviation from the paper (DESIGN.md §2), needed for the generalisation.
+    """
+
+    def __init__(self, model: LongTailModel, desired_accuracy: float,
+                 ema: float = 0.98, patience: int = 5, min_steps: int = 20,
+                 require_arming: bool = True):
+        self.h_star = model.threshold_for(desired_accuracy)
+        self.desired_accuracy = desired_accuracy
+        self.ema = ema
+        self.patience = patience
+        self.min_steps = min_steps
+        # arming: the h signal must first EXCEED h* (i.e. training must be
+        # visibly improving) before sub-threshold readings count — prevents
+        # spurious stops during the flat warmup phase where h starts near 0.
+        self.require_arming = require_arming
+        self._armed = not require_arming
+        self._smoothed = None
+        self._prev = None
+        self._anchor = None   # J₀ — see harvest_lm_trace on why not J_{i−1}
+        self._hits = 0
+        self.step = 0
+        self.history: list[tuple[int, float, float]] = []  # (step, J_ema, h)
+
+    def update(self, objective: float) -> bool:
+        """Feed one objective reading; returns True when training should stop."""
+        self.step += 1
+        obj = float(objective)
+        self._smoothed = obj if self._smoothed is None else (
+            self.ema * self._smoothed + (1 - self.ema) * obj)
+        if self._prev is None:
+            self._prev = self._smoothed
+            self._anchor = max(abs(self._smoothed), 1e-30)
+            return False
+        h = abs(self._smoothed - self._prev) / self._anchor
+        self._prev = self._smoothed
+        self.history.append((self.step, self._smoothed, h))
+        if not self._armed:
+            self._armed = h > self.h_star
+            return False
+        if self.step < self.min_steps:
+            return False
+        self._hits = self._hits + 1 if h <= self.h_star else 0
+        return self._hits >= self.patience

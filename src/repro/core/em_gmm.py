@@ -1,0 +1,191 @@
+"""EM for diagonal-covariance Gaussian mixtures — the paper's second algorithm.
+
+The E-step log-density is decomposed into three [N,D]×[D,K] matmuls
+(x²·(1/σ²)ᵀ, x·(μ/σ²)ᵀ and constants), so the hot loop is MXU-shaped like the
+k-means assignment (DESIGN.md §2); the fused Pallas version lives in
+``repro.kernels.gmm_estep``.  Objective = total log-likelihood, monotonically
+increasing (Wu 1983), so Eq. 7's change rate applies unchanged.
+
+Diagonal covariance is a documented assumption (DESIGN.md §6): the paper does
+not specify the covariance structure; diagonal is the standard big-data
+choice and keeps the E-step matmul-friendly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_LOG2PI = 1.8378770664093453
+
+
+class GMMParams(NamedTuple):
+    means: jnp.ndarray     # [K, D]
+    var: jnp.ndarray       # [K, D] diagonal covariance
+    log_w: jnp.ndarray     # [K] log mixture weights
+
+
+class EMState(NamedTuple):
+    params: GMMParams
+    j_prev: jnp.ndarray
+    j_curr: jnp.ndarray
+    h: jnp.ndarray
+    hits: jnp.ndarray
+    iteration: jnp.ndarray
+
+
+VAR_FLOOR = 1e-6
+
+
+def log_prob(x, params: GMMParams):
+    """[N,K] per-component log densities via the matmul decomposition."""
+    x = x.astype(jnp.float32)
+    inv_var = 1.0 / params.var                                   # [K,D]
+    # Σ_d (x−μ)²/σ² = x²·(1/σ²) − 2·x·(μ/σ²) + Σ_d μ²/σ²
+    quad = ((x * x) @ inv_var.T
+            - 2.0 * (x @ (params.means * inv_var).T)
+            + jnp.sum(params.means ** 2 * inv_var, axis=-1)[None, :])
+    log_det = jnp.sum(jnp.log(params.var), axis=-1)              # [K]
+    d = x.shape[-1]
+    return (params.log_w[None, :]
+            - 0.5 * (quad + log_det[None, :] + d * _LOG2PI))
+
+
+def estep_stats(x, params: GMMParams, axis_name=None, use_kernel: bool = False):
+    """Fused E-step: responsibilities → (labels, loglik, r_sum, r_x, r_x2).
+
+    All M-step sufficient statistics come out of one pass over the points —
+    the same contract as the ``gmm_estep`` Pallas kernel.
+    """
+    if use_kernel:
+        from repro.kernels.gmm_estep import ops as _gops
+        labels, loglik, r_sum, r_x, r_x2 = _gops.gmm_estep(
+            x, params.means, params.var, params.log_w)
+    else:
+        lp = log_prob(x, params)                                 # [N,K]
+        lse = jax.scipy.special.logsumexp(lp, axis=-1)           # [N]
+        resp = jnp.exp(lp - lse[:, None])                        # [N,K]
+        labels = jnp.argmax(lp, axis=-1).astype(jnp.int32)
+        loglik = jnp.sum(lse)
+        r_sum = jnp.sum(resp, axis=0)                            # [K]
+        xf = x.astype(jnp.float32)
+        r_x = resp.T @ xf                                        # [K,D]
+        r_x2 = resp.T @ (xf * xf)                                # [K,D]
+    if axis_name is not None:
+        loglik = jax.lax.psum(loglik, axis_name)
+        r_sum = jax.lax.psum(r_sum, axis_name)
+        r_x = jax.lax.psum(r_x, axis_name)
+        r_x2 = jax.lax.psum(r_x2, axis_name)
+    return labels, loglik, r_sum, r_x, r_x2
+
+
+def mstep(params: GMMParams, r_sum, r_x, r_x2, n_total) -> GMMParams:
+    safe = jnp.maximum(r_sum, 1e-10)[:, None]
+    means = r_x / safe
+    var = jnp.maximum(r_x2 / safe - means ** 2, VAR_FLOOR)
+    # Components with no support keep their old parameters (mirrors k-means
+    # empty-cluster handling).
+    alive = (r_sum > 1e-8)[:, None]
+    means = jnp.where(alive, means, params.means)
+    var = jnp.where(alive, var, params.var)
+    log_w = jnp.log(jnp.maximum(r_sum / n_total, 1e-20))
+    return GMMParams(means=means, var=var, log_w=log_w)
+
+
+def em_step(x, params: GMMParams, n_total=None, axis_name=None,
+            use_kernel: bool = False):
+    """One EM iteration. Returns (new_params, labels, loglik)."""
+    labels, loglik, r_sum, r_x, r_x2 = estep_stats(x, params, axis_name, use_kernel)
+    if n_total is None:
+        n_total = jnp.asarray(x.shape[0], jnp.float32)
+        if axis_name is not None:
+            n_total = jax.lax.psum(n_total, axis_name)
+    return mstep(params, r_sum, r_x, r_x2, n_total), labels, loglik
+
+
+def init_from_kmeans(x, centroids) -> GMMParams:
+    """Means from k-means; shared isotropic variance; uniform weights."""
+    k = centroids.shape[0]
+    x = x.astype(jnp.float32)
+    global_var = jnp.maximum(jnp.var(x, axis=0), VAR_FLOOR)
+    return GMMParams(
+        means=jnp.asarray(centroids, jnp.float32),
+        var=jnp.broadcast_to(global_var, (k, x.shape[1])).astype(jnp.float32),
+        log_w=jnp.full((k,), -jnp.log(k), jnp.float32),
+    )
+
+
+def random_init(key, x, k: int) -> GMMParams:
+    from .kmeans import random_init as km_random
+    return init_from_kmeans(x, km_random(key, x, k))
+
+
+# --------------------------------------------------------------------------
+# Drivers (mirror repro.core.kmeans)
+# --------------------------------------------------------------------------
+
+def em_fit_traced(x, params0: GMMParams, max_iters: int = 500,
+                  tol: float = 0.0, use_kernel: bool = False):
+    """Host loop recording (loglik_i, labels_i) — for training groups."""
+    step = jax.jit(functools.partial(em_step, use_kernel=use_kernel))
+    params = params0
+    labels_hist, js = [], []
+    prev = None
+    for _ in range(max_iters):
+        params, labels, loglik = step(jnp.asarray(x), params)
+        labels_hist.append(labels)
+        js.append(float(loglik))
+        if prev is not None and abs(js[-1] - prev) <= tol * max(abs(prev), 1e-30):
+            break
+        prev = js[-1]
+    return {
+        "labels_history": jnp.stack(labels_hist),
+        "objectives": jnp.asarray(js),
+        "labels": labels_hist[-1],
+        "params": params,
+        "n_iters": len(js),
+    }
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_iters", "axis_name", "use_kernel",
+                                    "patience"))
+def em_fit_earlystop(x, params0: GMMParams, h_star, max_iters: int = 500,
+                     axis_name=None, use_kernel: bool = False,
+                     patience: int = 1):
+    """Production driver: stop on device when h_i ≤ h* for ``patience``
+    consecutive iterations (Eq. 7 on loglik; see kmeans_fit_earlystop)."""
+    x = x.astype(jnp.float32)
+    init = EMState(params=params0,
+                   j_prev=jnp.asarray(jnp.inf, jnp.float32),
+                   j_curr=jnp.asarray(jnp.inf, jnp.float32),
+                   h=jnp.asarray(jnp.inf, jnp.float32),
+                   hits=jnp.asarray(0, jnp.int32),
+                   iteration=jnp.asarray(0, jnp.int32))
+
+    def cond(s: EMState):
+        not_stopped = jnp.logical_or(s.iteration < 2, s.hits < patience)
+        return jnp.logical_and(not_stopped, s.iteration < max_iters)
+
+    def body(s: EMState):
+        params, _, j = em_step(x, s.params, axis_name=axis_name,
+                               use_kernel=use_kernel)
+        h = jnp.where(
+            jnp.isfinite(s.j_curr),
+            jnp.abs(j - s.j_curr) / jnp.maximum(jnp.abs(s.j_curr), 1e-30),
+            jnp.asarray(jnp.inf, jnp.float32))
+        hits = jnp.where(h <= h_star, s.hits + 1, 0)
+        return EMState(params, s.j_curr, j, h, hits, s.iteration + 1)
+
+    final = jax.lax.while_loop(cond, body, init)
+    labels, loglik, *_ = estep_stats(x, final.params, axis_name, use_kernel)
+    return final.params, labels, loglik, final.iteration
+
+
+def em_fit_full(x, params0: GMMParams, max_iters: int = 1000, axis_name=None,
+                use_kernel: bool = False):
+    """Reference run: converge to (near) machine-precision loglik stability."""
+    return em_fit_earlystop(x, params0, h_star=1e-12, max_iters=max_iters,
+                            axis_name=axis_name, use_kernel=use_kernel)

@@ -1,0 +1,215 @@
+"""k-means (Lloyd) in JAX — MXU-shaped, distributable, early-stoppable.
+
+Assignment uses the identity ‖x−c‖² = ‖x‖² − 2·x·cᵀ + ‖c‖² so the dominant
+cost is an [N,D]×[D,K] matmul (TPU adaptation, DESIGN.md §2).  One fused pass
+produces labels, per-cluster sums/counts and the objective J — the same
+contract the Pallas kernel (``repro.kernels.kmeans_assign``) implements.
+
+Three drivers:
+  · ``kmeans_fit_traced``     — host loop, records (J_i, labels_i) per
+    iteration; used on *training groups* to harvest (r_i, h_i) pairs.
+  · ``kmeans_fit_earlystop``  — ``lax.while_loop`` with the h ≤ h* predicate
+    **on device**; the production path (§4).
+  · ``kmeans_fit_full``       — run to convergence (the paper's 100%-accuracy
+    reference, Time_full).
+
+All three accept ``axis_name`` so the same code runs under ``shard_map`` with
+points sharded over the data axes: the only cross-shard traffic per iteration
+is a psum of [K,D]+[K]+[1] statistics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KMeansState(NamedTuple):
+    centroids: jnp.ndarray   # [K, D]
+    j_prev: jnp.ndarray      # [] previous objective
+    j_curr: jnp.ndarray      # [] current objective
+    h: jnp.ndarray           # [] change rate (Eq. 7)
+    hits: jnp.ndarray        # [] int32 — consecutive h ≤ h* readings
+    iteration: jnp.ndarray   # [] int32
+    moved: jnp.ndarray       # [] bool — any centroid moved this iteration
+
+
+def assign_and_stats(x, centroids, axis_name=None, use_kernel: bool = False):
+    """Fused assignment pass.
+
+    Returns (labels [N] int32, sums [K,D] f32, counts [K] f32, j []).
+    ``axis_name``: psum the statistics over those mesh axes (shard_map mode).
+    ``use_kernel``: route through the Pallas kernel (TPU target; interpret on CPU).
+    """
+    if use_kernel:
+        from repro.kernels.kmeans_assign import ops as _kops
+        labels, sums, counts, j = _kops.kmeans_assign(x, centroids)
+    else:
+        x = x.astype(jnp.float32)
+        c = centroids.astype(jnp.float32)
+        x2 = jnp.sum(x * x, axis=-1, keepdims=True)          # [N,1]
+        c2 = jnp.sum(c * c, axis=-1)                         # [K]
+        d2 = x2 - 2.0 * (x @ c.T) + c2[None, :]              # [N,K] (MXU matmul)
+        labels = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+        mind2 = jnp.maximum(jnp.min(d2, axis=-1), 0.0)       # clamp fp cancellation
+        j = jnp.sum(mind2)
+        k = centroids.shape[0]
+        sums = jnp.zeros_like(c).at[labels].add(x)
+        counts = jnp.zeros((k,), jnp.float32).at[labels].add(1.0)
+    if axis_name is not None:
+        sums = jax.lax.psum(sums, axis_name)
+        counts = jax.lax.psum(counts, axis_name)
+        j = jax.lax.psum(j, axis_name)
+    return labels, sums, counts, j
+
+
+def update_centroids(centroids, sums, counts):
+    """New centroid = mean of members; empty clusters keep their old centroid."""
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new = sums / safe
+    return jnp.where(counts[:, None] > 0, new, centroids)
+
+
+def kmeans_step(x, centroids, axis_name=None, use_kernel: bool = False):
+    """One Lloyd iteration. Returns (new_centroids, labels, j)."""
+    labels, sums, counts, j = assign_and_stats(x, centroids, axis_name, use_kernel)
+    return update_centroids(centroids, sums, counts), labels, j
+
+
+# --------------------------------------------------------------------------
+# Initialisation
+# --------------------------------------------------------------------------
+
+def random_init(key, x, k: int):
+    """k distinct data points chosen uniformly."""
+    idx = jax.random.choice(key, x.shape[0], shape=(k,), replace=False)
+    return x[idx].astype(jnp.float32)
+
+
+def kmeans_plus_plus_init(key, x, k: int):
+    """k-means++ seeding (D² sampling) — fori_loop, O(k·N·D)."""
+    x = x.astype(jnp.float32)
+    n = x.shape[0]
+    key, sub = jax.random.split(key)
+    first = x[jax.random.randint(sub, (), 0, n)]
+    centroids = jnp.zeros((k, x.shape[1]), jnp.float32).at[0].set(first)
+    d2 = jnp.sum((x - first) ** 2, axis=-1)
+
+    def body(i, carry):
+        centroids, d2, key = carry
+        key, sub = jax.random.split(key)
+        probs = d2 / jnp.maximum(jnp.sum(d2), 1e-30)
+        idx = jax.random.choice(sub, n, p=probs)
+        c = x[idx]
+        centroids = centroids.at[i].set(c)
+        d2 = jnp.minimum(d2, jnp.sum((x - c) ** 2, axis=-1))
+        return centroids, d2, key
+
+    centroids, _, _ = jax.lax.fori_loop(1, k, body, (centroids, d2, key))
+    return centroids
+
+
+# --------------------------------------------------------------------------
+# Drivers
+# --------------------------------------------------------------------------
+
+def kmeans_fit_traced(x, centroids0, max_iters: int = 300,
+                      use_kernel: bool = False):
+    """Host-side loop recording the per-iteration history (training groups).
+
+    Returns dict with: labels_history [T,N], objectives [T], final labels,
+    centroids, and n_iters.  Runs until the partition is stable or max_iters.
+    """
+    step = jax.jit(functools.partial(kmeans_step, use_kernel=use_kernel))
+    centroids = jnp.asarray(centroids0, jnp.float32)
+    labels_hist, js = [], []
+    prev_labels = None
+    for _ in range(max_iters):
+        centroids, labels, j = step(jnp.asarray(x), centroids)
+        labels_hist.append(labels)
+        js.append(float(j))
+        if prev_labels is not None and bool(jnp.all(labels == prev_labels)):
+            break
+        prev_labels = labels
+    return {
+        "labels_history": jnp.stack(labels_hist),
+        "objectives": jnp.asarray(js),
+        "labels": labels_hist[-1],
+        "centroids": centroids,
+        "n_iters": len(js),
+    }
+
+
+def trace_accuracy(labels_history, k: int):
+    """r_i = Rand(P_i, P_f) for every recorded iteration (paper §3.2)."""
+    from .rand_index import rand_index
+    final = labels_history[-1]
+    rand = jax.jit(functools.partial(rand_index, ka=k, kb=k))
+    return jnp.asarray([float(rand(labels_history[i], final))
+                        for i in range(labels_history.shape[0])])
+
+
+def trace_to_rh(result, k: int):
+    """(r_i, h_i) pairs for regression fitting. h starts at i=2 (Eq. 7)."""
+    js = result["objectives"]
+    r = trace_accuracy(result["labels_history"], k)
+    h = jnp.abs(js[1:] - js[:-1]) / jnp.maximum(jnp.abs(js[:-1]), 1e-30)
+    return r[1:], h
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_iters", "axis_name", "use_kernel",
+                                    "patience"))
+def kmeans_fit_earlystop(x, centroids0, h_star, max_iters: int = 300,
+                         axis_name=None, use_kernel: bool = False,
+                         patience: int = 1):
+    """Production driver: lax.while_loop, stop when h_i ≤ h* (on device).
+
+    ``patience`` requires that many CONSECUTIVE sub-threshold readings —
+    h is not monotone iteration-to-iteration (plateau → re-acceleration),
+    and a single early dip must not trigger the stop (robustification; the
+    paper's first-crossing rule is patience=1).
+
+    The stop decision is computed from globally psum'd statistics, so every
+    shard sees the same h_i and the loop cannot diverge across devices.
+    Returns (centroids, labels, j, n_iters).
+    """
+    x = x.astype(jnp.float32)
+    init = KMeansState(
+        centroids=jnp.asarray(centroids0, jnp.float32),
+        j_prev=jnp.asarray(jnp.inf, jnp.float32),
+        j_curr=jnp.asarray(jnp.inf, jnp.float32),
+        h=jnp.asarray(jnp.inf, jnp.float32),
+        hits=jnp.asarray(0, jnp.int32),
+        iteration=jnp.asarray(0, jnp.int32),
+        moved=jnp.asarray(True),
+    )
+
+    def cond(s: KMeansState):
+        not_stopped = jnp.logical_or(s.iteration < 2, s.hits < patience)
+        return jnp.logical_and(
+            jnp.logical_and(not_stopped, s.moved),
+            s.iteration < max_iters)
+
+    def body(s: KMeansState):
+        new_c, _, j = kmeans_step(x, s.centroids, axis_name, use_kernel)
+        h = jnp.where(
+            jnp.isfinite(s.j_curr),
+            jnp.abs(j - s.j_curr) / jnp.maximum(jnp.abs(s.j_curr), 1e-30),
+            jnp.asarray(jnp.inf, jnp.float32))
+        hits = jnp.where(h <= h_star, s.hits + 1, 0)
+        moved = jnp.any(new_c != s.centroids)
+        return KMeansState(new_c, s.j_curr, j, h, hits, s.iteration + 1, moved)
+
+    final = jax.lax.while_loop(cond, body, init)
+    labels, _, _, j = assign_and_stats(x, final.centroids, axis_name, use_kernel)
+    return final.centroids, labels, j, final.iteration
+
+
+def kmeans_fit_full(x, centroids0, max_iters: int = 1000, axis_name=None,
+                    use_kernel: bool = False):
+    """Run to full convergence (h* = 0 → stop only when centroids freeze)."""
+    return kmeans_fit_earlystop(x, centroids0, h_star=0.0, max_iters=max_iters,
+                                axis_name=axis_name, use_kernel=use_kernel)

@@ -1,0 +1,2 @@
+from .synthetic import (road3d, skin, poker, spacenet_images, spacenet_pixels,
+                        load, DATASETS, PAPER_SIZES, SPACENET_IMAGE_SHAPE)

@@ -1,0 +1,1 @@
+from .hints import ShardingRules, use_rules, hint, current_rules

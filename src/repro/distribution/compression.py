@@ -1,0 +1,131 @@
+"""int8 gradient all-reduce with error feedback (beyond-paper distributed-
+optimization trick, DESIGN.md §4).
+
+Wire-format compression needs the reduction implemented manually — a plain
+``psum(int8)`` would still move int32 on the wire after XLA's accumulation-
+type promotion.  ``ring_allreduce_int8`` is a textbook ring: N−1
+reduce-scatter steps + N−1 all-gather steps via ``lax.ppermute``, moving
+int8 chunks only → 4× collective-byte reduction vs f32 psum (2× vs bf16).
+
+Quantisation: shared per-tensor scale = pmax(|g|)/127 (one scalar pmax —
+negligible), stochastic-free symmetric rounding.  ``ErrorFeedback`` carries
+the per-leaf quantisation residual into the next step (Karimireddy et al.
+2019 — keeps SGD convergence despite biased rounding).
+
+Used under ``shard_map`` on the DP axes; validated numerically in
+tests/test_compression.py (subprocess with 8 host devices).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, scale):
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def shared_scale(x, axis_name, axis_size: int = 1):
+    """Shared int8 scale covering the worst-case partial SUM (running
+    accumulations grow up to axis_size × the per-shard max — scaling by N
+    prevents clipping at the cost of proportionally coarser rounding, the
+    inherent precision/size trade of int8 reduction)."""
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    return jnp.maximum(amax * axis_size, 1e-12) / 127.0
+
+
+def ring_allreduce_int8(x, axis_name: str, axis_size: int):
+    """All-reduce ``x`` (f32) with int8 wire traffic. Mean-reduced output.
+
+    x is padded to a multiple of axis_size and chunked; each step sends one
+    int8 chunk to the next rank (ppermute ring). Local accumulation is f32
+    (re-quantised before each hop — the re-quantisation error is what the
+    error-feedback buffer absorbs).
+    """
+    if axis_size == 1:
+        return x
+    scale = shared_scale(x, axis_name, axis_size)
+    orig_shape = x.shape
+    n = x.size
+    pad = (-n) % axis_size
+    flat = jnp.concatenate([x.reshape(-1), jnp.zeros((pad,), x.dtype)])
+    chunks = flat.reshape(axis_size, -1)                    # [N, C]
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+
+    # --- reduce-scatter: after N−1 steps, rank r owns the full sum of chunk r+1
+    acc = chunks                                            # f32 accum
+    send = quantize_int8(chunks, scale)                     # int8 on the wire
+
+    def rs_step(i, carry):
+        acc, send = carry
+        recv = jax.lax.ppermute(send, axis_name, perm)
+        # chunk index being accumulated this step at this rank:
+        k = (idx - i - 1) % axis_size
+        upd = acc[k] + dequantize_int8(recv[k], scale)
+        acc = acc.at[k].set(upd)
+        send = send.at[k].set(quantize_int8(upd, scale))
+        return acc, send
+
+    acc, send = jax.lax.fori_loop(0, axis_size - 1, rs_step, (acc, send))
+
+    # --- all-gather: circulate the owned (fully-reduced) chunks
+    own = (idx + 1) % axis_size
+    out = jnp.zeros_like(chunks)
+    out = out.at[own].set(acc[own])
+    send_q = quantize_int8(acc, scale)
+
+    def ag_step(i, carry):
+        out, send_q = carry
+        recv = jax.lax.ppermute(send_q, axis_name, perm)
+        k = (idx - i) % axis_size
+        out = out.at[k].set(dequantize_int8(recv[k], scale))
+        send_q = send_q.at[k].set(recv[k])
+        return out, send_q
+
+    out, _ = jax.lax.fori_loop(0, axis_size - 1, ag_step, (out, send_q))
+    total = out.reshape(-1)[:n].reshape(orig_shape)
+    return total / axis_size
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_with_feedback(grads, ef_state, reduce_fn):
+    """g' = reduce(g + e);  e ← (g + e) − dequant-path(g + e).
+
+    ``reduce_fn(leaf)`` performs the lossy reduction (e.g. ring int8).  The
+    residual uses the local quantisation error (the standard EF-SGD form).
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        reduced = reduce_fn(corrected)
+        # local residual: what int8 rounding destroyed of OUR contribution
+        scale = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12) / 127.0
+        local_q = dequantize_int8(quantize_int8(corrected, scale), scale)
+        new_e = corrected - local_q
+        return reduced, new_e
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(tree, [o[0] for o in out])
+    new_e = jax.tree.unflatten(tree, [o[1] for o in out])
+    return new_g, new_e
+
+
+def fake_quantize_grads(grads):
+    """Single-device numerical model of the compressed all-reduce (tests &
+    single-host training): quantise→dequantise each leaf with its own scale."""
+    def one(g):
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        return dequantize_int8(quantize_int8(g.astype(jnp.float32), scale), scale)
+    return jax.tree.map(one, grads)

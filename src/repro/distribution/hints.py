@@ -1,0 +1,51 @@
+"""Logical-axis sharding hints, decoupled from model code.
+
+Model code calls ``hint(x, "act_btd")`` etc.; the launcher installs a rules
+object mapping logical names → PartitionSpec for the active mesh.  With no
+rules installed (unit tests, single device) hints are identity — model code
+never imports mesh machinery.
+
+Under ``with mesh:`` (the context used by dryrun/train), bare-PartitionSpec
+``with_sharding_constraint`` resolves against the context mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+class ShardingRules:
+    """name → PartitionSpec table; unknown names are identity (no constraint)."""
+
+    def __init__(self, table: dict[str, P]):
+        self.table = dict(table)
+
+    def apply(self, x, name: str):
+        spec = self.table.get(name)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def hint(x, name: str):
+    rules = current_rules()
+    return x if rules is None else rules.apply(x, name)

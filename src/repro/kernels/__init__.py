@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+kmeans_assign  — fused k-means assignment + statistics (paper's inner loop)
+gmm_estep      — fused diagonal-GMM E-step + M-step sufficient statistics
+flash_attention— GQA flash attention (causal / sliding-window / bidirectional)
+
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper
+with padding; interpret=True on CPU), ref.py (pure-jnp oracle for tests).
+"""

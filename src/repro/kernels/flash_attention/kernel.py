@@ -1,0 +1,117 @@
+"""Flash attention Pallas kernel (TPU target) — GQA, causal / sliding-window /
+bidirectional, online softmax.
+
+Grid: (batch, q_heads, n_q_blocks, n_kv_blocks); the kv dimension is the
+innermost (sequential on TPU) so the online-softmax state for one q tile
+lives in VMEM scratch across kv steps: m (running max), l (running sum),
+acc (unnormalised output).  K/V BlockSpecs map q-head → kv-head via
+h // (Hq // Hkv), which implements GQA with no K/V duplication in HBM.
+
+Masking is positional: with q tile offset qo and kv tile offset ko,
+    causal:          q_idx ≥ k_idx
+    sliding window:  q_idx − w < k_idx ≤ q_idx
+    bidirectional:   all pairs
+Fully-masked kv tiles are skipped with @pl.when (no MXU work) — this is what
+makes the causal kernel ~2× the naive blocked cost, and the sliding-window
+kernel O(S·w).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                 *, scale: float, causal: bool, window: int | None,
+                 block_q: int, block_k: int, n_kv_blocks: int, seq_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_off = qi * block_q
+    k_off = ki * block_k
+
+    # tile-level skip: run only if some (q, k) pair in this tile is visible
+    if window is not None:
+        run = jnp.logical_and(q_off + block_q - 1 >= k_off,
+                              q_off - window < k_off + block_k)
+    elif causal:
+        run = q_off + block_q - 1 >= k_off
+    else:
+        run = jnp.asarray(True)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [Tq, dh]
+        k = k_ref[0, 0].astype(jnp.float32)                # [Tk, dh]
+        v = v_ref[0, 0].astype(jnp.float32)                # [Tk, dh]
+        s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32)
+
+        rows = q_off + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_off + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols < seq_len                              # kv padding
+        if causal or window is not None:
+            mask = jnp.logical_and(mask, rows >= cols)
+        if window is not None:
+            mask = jnp.logical_and(mask, cols > rows - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool, window: int | None,
+                           scale: float, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = False):
+    """q [B,Hq,Sq,dh], k/v [B,Hkv,Skv,dh] (pre-padded) → o [B,Hq,Sq,dh]."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    assert sq % block_q == 0 and skv % block_k == 0
+    group = hq // hkv
+    n_q, n_kv = sq // block_q, skv // block_k
+    grid = (b, hq, n_q, n_kv)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          n_kv_blocks=n_kv, seq_len=skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # m: running max
+            pltpu.VMEM((block_q, 1), jnp.float32),    # l: running sum
+            pltpu.VMEM((block_q, dh), jnp.float32),   # acc: unnormalised out
+        ],
+        interpret=interpret,
+    )(q, k, v)

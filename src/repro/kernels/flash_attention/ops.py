@@ -1,0 +1,53 @@
+"""jit'd public wrapper for flash attention: pad seq/head-dim → kernel → trim.
+
+Padding: Sq/Skv → multiples of the block sizes (padded kv columns are masked
+inside the kernel via seq_len; padded q rows produce garbage rows that are
+trimmed); dh → multiple of 128 with zeros (contributes nothing to scores).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_k", "interpret"))
+def _padded_call(q, k, v, causal, window, scale, block_q, block_k, interpret):
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    sq_p = _round_up(sq, block_q)
+    sk_p = _round_up(skv, block_k)
+    dh_p = _round_up(dh, 128)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, dh_p - dh)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - skv), (0, dh_p - dh)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - skv), (0, dh_p - dh)))
+    o = flash_attention_kernel(qp, kp, vp, causal=causal, window=window,
+                               scale=scale, block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return o[:, :, :sq, :dh]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """Flash attention with GQA: q [B,Hq,S,dh], k/v [B,Hkv,S,dh]."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    block_q = min(block_q, _round_up(q.shape[2], 8))
+    block_k = min(block_k, _round_up(k.shape[2], 8))
+    return _padded_call(q, k, v, causal, window, float(scale),
+                        block_q, block_k, interpret)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (GQA, causal/sliding/bidirectional)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool, window: int | None = None,
+                  scale: float | None = None):
+    """q [B,Hq,Sq,dh], k/v [B,Hkv,Skv,dh] → [B,Hq,Sq,dh]; exact softmax."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    if scale is None:
+        scale = dh ** -0.5
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal or window is not None:
+        mask = rows >= cols
+    if window is not None:
+        mask = jnp.logical_and(mask, cols > rows - window)
+    s = jnp.where(mask[None, None], s, -1.0e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+from . import ops, ref
+from .ops import gmm_estep

@@ -1,0 +1,51 @@
+"""jit'd public wrapper for the GMM E-step kernel: precompute + pad + trim."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import gmm_estep_kernel
+
+_LOG2PI = 1.8378770664093453
+_NEG = -1.0e30
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _padded_call(x, means, var, log_w, block_n: int, interpret: bool):
+    n, d = x.shape
+    k = means.shape[0]
+    inv_var = 1.0 / var
+    a = (means * inv_var).astype(jnp.float32)          # b operand: μ/σ²
+    const = (log_w - 0.5 * (jnp.sum(means ** 2 * inv_var, axis=-1)
+                            + jnp.sum(jnp.log(var), axis=-1)
+                            + d * _LOG2PI)).astype(jnp.float32)
+    n_pad = _round_up(n, block_n)
+    d_pad = _round_up(d, 128)
+    k_pad = _round_up(k, 8)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, n_pad - n), (0, d_pad - d)))
+    ap = jnp.pad(inv_var.astype(jnp.float32), ((0, k_pad - k), (0, d_pad - d)))
+    bp = jnp.pad(a, ((0, k_pad - k), (0, d_pad - d)))
+    cp = jnp.pad(const, (0, k_pad - k), constant_values=_NEG)
+    labels, loglik, r_sum, r_x, r_x2 = gmm_estep_kernel(
+        xp, ap, bp, cp, n_valid=n, block_n=block_n, interpret=interpret)
+    return (labels[:n], loglik[0], r_sum[:k], r_x[:k, :d], r_x2[:k, :d])
+
+
+def gmm_estep(x, means, var, log_w, *, block_n: int = 1024,
+              interpret: bool | None = None):
+    """Fused E-step: (labels, loglik [], r_sum [K], r_x [K,D], r_x2 [K,D])."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    n = x.shape[0]
+    block_n = min(block_n, _round_up(max(n, 8), 8))
+    return _padded_call(x, means, var, log_w, block_n, interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused GMM E-step kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_LOG2PI = 1.8378770664093453
+
+
+def gmm_estep_ref(x, means, var, log_w):
+    """(labels [N] i32, loglik [1], r_sum [K], r_x [K,D], r_x2 [K,D])."""
+    x = x.astype(jnp.float32)
+    inv_var = 1.0 / var
+    quad = ((x * x) @ inv_var.T
+            - 2.0 * (x @ (means * inv_var).T)
+            + jnp.sum(means ** 2 * inv_var, axis=-1)[None, :])
+    log_det = jnp.sum(jnp.log(var), axis=-1)
+    d = x.shape[-1]
+    lp = log_w[None, :] - 0.5 * (quad + log_det[None, :] + d * _LOG2PI)
+    lse = jax.scipy.special.logsumexp(lp, axis=-1)
+    resp = jnp.exp(lp - lse[:, None])
+    labels = jnp.argmax(lp, axis=-1).astype(jnp.int32)
+    return (labels, jnp.sum(lse)[None], jnp.sum(resp, axis=0),
+            resp.T @ x, resp.T @ (x * x))

@@ -1,0 +1,55 @@
+"""jit'd public wrapper: pad → pallas_call → trim.
+
+Padding policy (TPU alignment):
+  D → multiple of 128 (vector lanes) with zeros — distances unchanged;
+  K → multiple of 8 (sublanes) with +1e9 sentinel centroids — never argmin;
+  N → multiple of block_n — masked out of statistics via static n_valid.
+
+On CPU (this container) the kernel runs in interpret mode; on TPU it
+compiles.  ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import kmeans_assign_kernel
+
+_PAD_CENTROID = 1.0e9
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _padded_call(x, centroids, block_n: int, interpret: bool):
+    n, d = x.shape
+    k = centroids.shape[0]
+    n_pad = _round_up(n, block_n)
+    d_pad = _round_up(d, 128)
+    k_pad = _round_up(k, 8)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, n_pad - n), (0, d_pad - d)))
+    cp = jnp.pad(centroids.astype(jnp.float32),
+                 ((0, k_pad - k), (0, d_pad - d)))
+    if k_pad > k:  # sentinel rows: huge distance, never selected
+        cp = cp.at[k:, :].set(_PAD_CENTROID)
+    labels, sums, counts, j = kmeans_assign_kernel(
+        xp, cp, n_valid=n, block_n=block_n, interpret=interpret)
+    return labels[:n], sums[:k, :d], counts[:k], j[0]
+
+
+def kmeans_assign(x, centroids, *, block_n: int = 1024,
+                  interpret: bool | None = None):
+    """Fused assignment: (labels [N] i32, sums [K,D], counts [K], j [])."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    n = x.shape[0]
+    block_n = min(block_n, _round_up(max(n, 8), 8))
+    return _padded_call(x, centroids, block_n, interpret)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused k-means assignment kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(x, centroids):
+    """(labels [N] i32, sums [K,D] f32, counts [K] f32, j [1] f32)."""
+    x = x.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)
+    d2 = x2 - 2.0 * (x @ c.T) + c2[None, :]
+    labels = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    j = jnp.sum(jnp.maximum(jnp.min(d2, axis=-1), 0.0))[None]
+    k = c.shape[0]
+    sums = jnp.zeros_like(c).at[labels].add(x)
+    counts = jnp.zeros((k,), jnp.float32).at[labels].add(1.0)
+    return labels, sums, counts, j

@@ -1,0 +1,202 @@
+"""Production clustering driver — the paper's pipeline end-to-end (§4, §5).
+
+    PYTHONPATH=src python -m repro.launch.cluster \
+        --dataset skin --k 2 --algorithm kmeans --desired-accuracy 0.99
+
+Pipeline: synthesize/load data → random-sample into groups → 10-fold split →
+run training groups to convergence recording (r_i, h_i) → fit the regression
+(model selection or pinned quadratic) → h* = f(r*) → early-stopped production
+clustering (on-device while_loop; shard_map over the data axis when this host
+has multiple devices) → validation: achieved accuracy vs. the full run +
+cost report (Eq. 6/9/10).
+
+Set ``--devices N`` via XLA host-platform flag *before* launch to exercise
+the distributed path, e.g.:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 python -m ... --shard
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.core import em_gmm
+from repro.data import load as load_data, spacenet_pixels
+
+
+def train_regression(groups, k: int, algorithm: str, *, max_iters: int,
+                     family: str | None, use_kernel: bool = False):
+    """Run each training group to convergence; fit h(r).  Paper §5.3.1."""
+    traces = []
+    t0 = time.time()
+    for gi in range(groups.shape[0]):
+        x = jnp.asarray(groups[gi])
+        key = jax.random.PRNGKey(gi)
+        c0 = core.kmeans_plus_plus_init(key, x, k)
+        if algorithm == "kmeans":
+            res = core.kmeans_fit_traced(x, c0, max_iters=max_iters,
+                                         use_kernel=use_kernel)
+            r, h = core.trace_to_rh(res, k)
+        else:
+            p0 = em_gmm.init_from_kmeans(x, c0)
+            res = em_gmm.em_fit_traced(x, p0, max_iters=max_iters, tol=1e-12,
+                                       use_kernel=use_kernel)
+            r = core.trace_accuracy(res["labels_history"], k)[1:]
+            js = res["objectives"]
+            h = jnp.abs(js[1:] - js[:-1]) / jnp.maximum(jnp.abs(js[:-1]), 1e-30)
+        traces.append((np.asarray(r), np.asarray(h)))
+    model = core.fit_longtail(traces, algorithm=algorithm, dataset="train",
+                              family=family)
+    return model, time.time() - t0
+
+
+def run_production(x, k: int, algorithm: str, h_star: float, *,
+                   max_iters: int, seed: int = 0, shard: bool = False,
+                   use_kernel: bool = False, patience: int = 3):
+    """Early-stopped production run; optional shard_map over host devices."""
+    key = jax.random.PRNGKey(seed)
+    x = jnp.asarray(x)
+    c0 = core.kmeans_plus_plus_init(key, x, k)
+
+    if shard and len(jax.devices()) > 1:
+        from jax.sharding import PartitionSpec as P
+        from jax import shard_map
+        n_dev = len(jax.devices())
+        mesh = jax.make_mesh((n_dev,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        n = x.shape[0] // n_dev * n_dev        # truncate to shardable size
+        x = x[:n]
+        if algorithm == "kmeans":
+            fit = shard_map(
+                functools.partial(core.kmeans_fit_earlystop,
+                                  max_iters=max_iters, axis_name="data",
+                                  use_kernel=use_kernel, patience=patience),
+                mesh=mesh, in_specs=(P("data"), P(None, None), P()),
+                out_specs=(P(None, None), P("data"), P(), P()),
+                check_vma=False)
+            t0 = time.time()
+            c, labels, j, iters = fit(x, c0, jnp.asarray(h_star))
+            jax.block_until_ready(labels)
+            return labels, float(j), int(iters), time.time() - t0
+        p0 = em_gmm.init_from_kmeans(x, c0)
+        fit = shard_map(
+            functools.partial(em_gmm.em_fit_earlystop, max_iters=max_iters,
+                              axis_name="data", use_kernel=use_kernel,
+                              patience=patience),
+            mesh=mesh,
+            in_specs=(P("data"),
+                      em_gmm.GMMParams(P(None, None), P(None, None), P(None)),
+                      P()),
+            out_specs=(em_gmm.GMMParams(P(None, None), P(None, None), P(None)),
+                       P("data"), P(), P()),
+            check_vma=False)
+        t0 = time.time()
+        params, labels, ll, iters = fit(x, p0, jnp.asarray(h_star))
+        jax.block_until_ready(labels)
+        return labels, float(ll), int(iters), time.time() - t0
+
+    t0 = time.time()
+    if algorithm == "kmeans":
+        c, labels, j, iters = core.kmeans_fit_earlystop(
+            x, c0, h_star, max_iters=max_iters, use_kernel=use_kernel,
+            patience=patience)
+    else:
+        p0 = em_gmm.init_from_kmeans(x, c0)
+        p, labels, j, iters = em_gmm.em_fit_earlystop(
+            x, p0, h_star, max_iters=max_iters, use_kernel=use_kernel,
+            patience=patience)
+    jax.block_until_ready(labels)
+    return labels, float(j), int(iters), time.time() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="skin",
+                    choices=["road3d", "skin", "poker", "spacenet"])
+    ap.add_argument("--k", type=int, default=2)
+    ap.add_argument("--algorithm", default="kmeans", choices=["kmeans", "em"])
+    ap.add_argument("--desired-accuracy", type=float, default=0.99)
+    ap.add_argument("--n", type=int, default=60_000)
+    ap.add_argument("--group-size", type=int, default=10_000)
+    ap.add_argument("--train-groups", type=int, default=4)
+    ap.add_argument("--prod-groups", type=int, default=2)
+    ap.add_argument("--max-iters", type=int, default=300)
+    ap.add_argument("--family", default="quadratic",
+                    help="'auto' runs the paper's model-selection comparison")
+    ap.add_argument("--shard", action="store_true")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route through the Pallas kernels (interpret on CPU)")
+    ap.add_argument("--instance", default="m5.large")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    n_prod = max(args.prod_groups, 1)
+    if args.dataset == "spacenet":
+        groups = spacenet_pixels(n_images=args.train_groups + n_prod,
+                                 k_true=args.k)
+    else:
+        data = load_data(args.dataset, n=args.n)
+        groups = core.random_groups(data, args.group_size,
+                                    max_groups=args.train_groups + n_prod)
+    train_g, prod_g = groups[:args.train_groups], groups[args.train_groups:]
+
+    family = None if args.family == "auto" else args.family
+    model, t_train = train_regression(train_g, args.k, args.algorithm,
+                                      max_iters=args.max_iters, family=family,
+                                      use_kernel=args.use_kernel)
+    h_star = model.threshold_for(args.desired_accuracy)
+    print(f"regression ({model.regression.family}): coeffs="
+          f"{[round(c, 6) for c in model.regression.coeffs]} "
+          f"R²={model.regression.metrics.r2:.4f}")
+    print(f"h*({args.desired_accuracy}) = {h_star:.3e}   "
+          f"(training took {t_train:.1f}s, amortised — Eq. 9)")
+
+    # production: each group is one clustering task — the paper's unit of
+    # work (§5.2 "image = group"; the regression transfers within-regime)
+    t_actual = t_full = 0.0
+    accs, iters_es, iters_fu = [], [], []
+    for gi, g in enumerate(prod_g):
+        labels, j, it1, t1 = run_production(
+            g, args.k, args.algorithm, h_star, max_iters=args.max_iters,
+            seed=100 + gi, shard=args.shard, use_kernel=args.use_kernel)
+        labels_f, j_f, it2, t2 = run_production(
+            g, args.k, args.algorithm, 0.0, max_iters=args.max_iters * 3,
+            seed=100 + gi, shard=args.shard, use_kernel=args.use_kernel)
+        t_actual += t1
+        t_full += t2
+        accs.append(float(core.rand_index(labels[:labels_f.shape[0]],
+                                          labels_f, args.k, args.k)))
+        iters_es.append(int(it1))
+        iters_fu.append(int(it2))
+    acc = float(np.mean(accs))
+    rep = core.report(t_actual, t_full, time_train_s=t_train,
+                      instance=args.instance)
+    print(f"early-stop: {iters_es} iters {t_actual:.2f}s | "
+          f"full: {iters_fu} iters {t_full:.2f}s | achieved accuracy "
+          f"{acc:.4f} (per group: {[round(a, 3) for a in accs]})")
+    print(f"cost-effectiveness (Eq.10) = {rep.cost_effectiveness:.3f}  "
+          f"savings = ${rep.savings_usd:.6f} on {args.instance}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({
+                "dataset": args.dataset, "k": args.k,
+                "algorithm": args.algorithm,
+                "desired_accuracy": args.desired_accuracy,
+                "achieved_accuracy": acc, "h_star": h_star,
+                "iters_earlystop": sum(iters_es),
+                "iters_full": sum(iters_fu),
+                "time_actual_s": t_actual, "time_full_s": t_full,
+                "time_train_s": t_train,
+                "cost_effectiveness": rep.cost_effectiveness,
+                "regression": json.loads(model.to_json()),
+            }, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

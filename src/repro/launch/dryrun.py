@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import — jax locks the device count on first init.
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input-shape × mesh) cell on 512 placeholder devices and
+extract the roofline terms (deliverable g).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Per cell this: builds the production mesh, derives param/opt/cache/input
+shardings (repro.distribution.sharding), lowers the right step
+(train_step / prefill_step / serve_step), compiles, prints
+memory_analysis + cost_analysis, parses collective bytes from the
+optimized HLO, and writes experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs, SHAPES, applicable
+from repro.distribution import sharding as shd
+from repro.distribution.hints import use_rules
+from repro.models import transformer, model_zoo
+from repro.training import train_loop, optimizer as opt_lib
+from repro.launch import hlo_analysis, hlo_cost
+from repro.launch.mesh import make_production_mesh
+
+
+@dataclasses.dataclass
+class DryrunOptions:
+    microbatches: int | None = None   # None = auto (≈128k tokens per micro)
+    fsdp: bool = True
+    remat: str | None = None          # None = arch default
+    donate: bool = True
+    # §Perf hillclimb knobs
+    xlstm_chunk: int | None = None    # chunkwise-parallel mLSTM
+    moe_groups: int | None = None     # grouped MoE dispatch (align with DP)
+    window_cache: bool | None = None  # ring-buffer local KV caches
+
+
+def _auto_microbatches(shape) -> int:
+    tokens = shape.global_batch * shape.seq_len
+    m = max(1, tokens // 131_072)
+    while shape.global_batch % m:
+        m -= 1
+    return m
+
+
+def _replicated(mesh, struct):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), struct)
+
+
+def _state_shardings(state_struct, mesh, fsdp: bool):
+    p_sh = shd.param_shardings(state_struct.params, mesh, fsdp=fsdp)
+    return train_loop.TrainState(
+        params=p_sh,
+        opt=opt_lib.OptState(step=NamedSharding(mesh, P()),
+                             m=shd.param_shardings(state_struct.opt.m, mesh,
+                                                   fsdp=fsdp),
+                             v=shd.param_shardings(state_struct.opt.v, mesh,
+                                                   fsdp=fsdp)),
+        ef=None,
+        rng=NamedSharding(mesh, P()),
+    )
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               opts: DryrunOptions = DryrunOptions()):
+    """Lower + compile one cell. Returns (compiled, report dict)."""
+    cfg = get_config(arch)
+    if opts.remat is not None:
+        cfg = dataclasses.replace(cfg, remat=opts.remat)
+    if opts.xlstm_chunk is not None:
+        cfg = dataclasses.replace(cfg, xlstm_chunk=opts.xlstm_chunk)
+    if opts.moe_groups is not None:
+        cfg = dataclasses.replace(cfg, moe_dispatch_groups=opts.moe_groups)
+    if opts.window_cache is not None:
+        cfg = dataclasses.replace(cfg, windowed_local_cache=opts.window_cache)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    specs = model_zoo.input_specs(cfg, shape)
+    batch_shardable = shape.global_batch % _dp_size(mesh) == 0
+    rules = shd.activation_rules(mesh, batch_shardable=batch_shardable)
+
+    key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+
+    t0 = time.time()
+    with mesh, use_rules(rules):
+        if shape.kind == "train":
+            m = opts.microbatches or _auto_microbatches(shape)
+            tc = train_loop.TrainConfig(microbatches=m)
+            state_struct = jax.eval_shape(
+                functools.partial(train_loop.init_state, cfg=cfg,
+                                  train_cfg=tc), key_struct)
+            state_sh = _state_shardings(state_struct, mesh, opts.fsdp)
+            batch_sh = shd.input_shardings(specs, mesh, shape.global_batch)
+            step = train_loop.make_train_step(cfg, tc)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,) if opts.donate else ())
+            lowered = jitted.lower(state_struct, specs)
+            model_flops = 6.0 * n_active * tokens
+            extra = {"microbatches": m}
+        elif shape.kind == "prefill":
+            params_struct = jax.eval_shape(
+                functools.partial(transformer.init_lm, cfg=cfg), key_struct)
+            p_sh = shd.param_shardings(params_struct, mesh, fsdp=opts.fsdp)
+            batch_sh = shd.input_shardings(specs, mesh, shape.global_batch)
+
+            def prefill_step(params, batch):
+                return transformer.prefill(
+                    params, cfg, tokens=batch.get("tokens"),
+                    embeddings=batch.get("embeddings"),
+                    image_embeds=batch.get("image_embeds"))
+
+            # pin cache output shardings to the decode-cache layout
+            cache_sh = None
+            if not cfg.encoder_only:
+                cache_struct = model_zoo.cache_struct(cfg, shape.global_batch,
+                                                      shape.seq_len)
+                cache_sh = shd.input_shardings({"caches": cache_struct}, mesh,
+                                               shape.global_batch)["caches"]
+            jitted = jax.jit(prefill_step, in_shardings=(p_sh, batch_sh),
+                             out_shardings=(None, cache_sh))
+            lowered = jitted.lower(params_struct, specs)
+            model_flops = 2.0 * n_active * tokens
+            extra = {}
+        else:  # decode
+            params_struct = jax.eval_shape(
+                functools.partial(transformer.init_lm, cfg=cfg), key_struct)
+            p_sh = shd.param_shardings(params_struct, mesh, fsdp=opts.fsdp)
+            in_sh = shd.input_shardings(specs, mesh, shape.global_batch)
+
+            def serve_step(params, batch):
+                return transformer.decode_step(
+                    params, cfg, batch["token"], batch["caches"], batch["pos"],
+                    image_embeds=batch.get("image_embeds"))
+
+            jitted = jax.jit(
+                serve_step, in_shardings=(p_sh, in_sh),
+                out_shardings=(None, in_sh["caches"]),
+                donate_argnums=(1,) if opts.donate else ())
+            lowered = jitted.lower(params_struct, specs)
+            model_flops = 2.0 * n_active * shape.global_batch
+            extra = {}
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = hlo_analysis.memory_stats(compiled)
+    xla_cost = compiled.cost_analysis()
+    analyzed = hlo_cost.analyze(compiled.as_text())
+    rl = hlo_analysis.roofline(
+        {"flops": analyzed.flops, "bytes accessed": analyzed.bytes},
+        analyzed.coll, model_flops_per_chip=model_flops / n_chips)
+    report = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "params_total": get_config(arch).param_count(),
+        "params_active": n_active,
+        "compile_s": round(compile_s, 1),
+        "memory": mem,
+        "roofline": rl.as_dict(),
+        "dynamic_loops": analyzed.dynamic_loops,
+        "xla_cost_analysis_raw": {          # loop-bodies-once; reference only
+            "flops": float(xla_cost.get("flops", 0) or 0),
+            "bytes_accessed": float(xla_cost.get("bytes accessed", 0) or 0)},
+        "options": dataclasses.asdict(opts),
+        **extra,
+    }
+    return compiled, report
+
+
+def _dp_size(mesh):
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+# --------------------------------------------------------------------------
+# Paper-workload cells: one distributed k-means / EM iteration at SpaceNet
+# production scale (points sharded across the whole mesh, statistics
+# all-reduced — the step the early-stopped while_loop runs repeatedly).
+# --------------------------------------------------------------------------
+
+CLUSTER_CELLS = {
+    # n = 2^31 pixels ≈ 12 SpaceNet-scale image shards resident per step
+    "paper-kmeans": dict(algorithm="kmeans", n=2**31, d=3, k=6),
+    "paper-em": dict(algorithm="em", n=2**31, d=3, k=6),
+}
+
+
+def lower_cluster_cell(name: str, multi_pod: bool, fused: bool = True):
+    from repro.core import kmeans as km, em_gmm
+    spec = CLUSTER_CELLS[name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    all_axes = tuple(mesh.axis_names)
+    n, d, kk = spec["n"], spec["d"], spec["k"]
+    x_struct = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    x_sh = NamedSharding(mesh, P(all_axes, None))
+    rep = NamedSharding(mesh, P())
+
+    t0 = time.time()
+    with mesh:
+        if spec["algorithm"] == "kmeans":
+            c_struct = jax.ShapeDtypeStruct((kk, d), jnp.float32)
+            step = lambda x, c: km.kmeans_step(x, c)
+            jitted = jax.jit(step, in_shardings=(x_sh, rep),
+                             out_shardings=(rep, None, rep))
+            lowered = jitted.lower(x_struct, c_struct)
+            model_flops = 2.0 * n * kk * d          # the distance matmul
+        else:
+            params_struct = em_gmm.GMMParams(
+                means=jax.ShapeDtypeStruct((kk, d), jnp.float32),
+                var=jax.ShapeDtypeStruct((kk, d), jnp.float32),
+                log_w=jax.ShapeDtypeStruct((kk,), jnp.float32))
+            p_sh = em_gmm.GMMParams(means=rep, var=rep, log_w=rep)
+            step = lambda x, p: em_gmm.em_step(x, p, n_total=float(n))
+            jitted = jax.jit(step, in_shardings=(x_sh, p_sh),
+                             out_shardings=(p_sh, None, rep))
+            lowered = jitted.lower(x_struct, params_struct)
+            model_flops = 8.0 * n * kk * d          # 3 matmuls + weighted stats
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = hlo_analysis.memory_stats(compiled)
+    analyzed = hlo_cost.analyze(compiled.as_text())
+    rl = hlo_analysis.roofline(
+        {"flops": analyzed.flops, "bytes accessed": analyzed.bytes},
+        analyzed.coll, model_flops_per_chip=model_flops / n_chips)
+    return compiled, {
+        "arch": name, "shape": f"step_n{n}_d{d}_k{kk}",
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips, "compile_s": round(compile_s, 1),
+        "memory": mem, "roofline": rl.as_dict(),
+        "dynamic_loops": analyzed.dynamic_loops,
+    }
+
+
+def run_cell(arch, shape_name, multi_pod, opts, out_dir):
+    mesh_tag = "pod2x16x16" if multi_pod else "16x16"
+    name = f"{arch}__{shape_name}__{mesh_tag}"
+    try:
+        if arch in CLUSTER_CELLS:
+            compiled, report = lower_cluster_cell(arch, multi_pod)
+            name = f"{arch}__{report['shape']}__{mesh_tag}"
+        else:
+            compiled, report = lower_cell(arch, shape_name, multi_pod, opts)
+        print(f"[OK] {name}: compile {report['compile_s']}s  "
+              f"dominant={report['roofline']['dominant']}  "
+              f"args/dev={report['memory']['argument_size_in_bytes']/2**30:.2f}GiB  "
+              f"temp/dev={report['memory']['temp_size_in_bytes']/2**30:.2f}GiB")
+        print("  memory_analysis:", compiled.memory_analysis())
+        ca = compiled.cost_analysis()
+        print("  cost_analysis: flops/dev=%.3e bytes/dev=%.3e"
+              % (ca.get("flops", 0), ca.get("bytes accessed", 0)))
+    except Exception as e:
+        report = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-2000:]}
+        print(f"[FAIL] {name}: {type(e).__name__}: {e}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+            json.dump(report, f, indent=1, default=str)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--xlstm-chunk", type=int, default=None)
+    ap.add_argument("--moe-groups", type=int, default=None)
+    ap.add_argument("--full-local-cache", action="store_true",
+                    help="disable the windowed ring cache (A/B baseline)")
+    args = ap.parse_args()
+    opts = DryrunOptions(microbatches=args.microbatches,
+                         fsdp=not args.no_fsdp, remat=args.remat,
+                         xlstm_chunk=args.xlstm_chunk,
+                         moe_groups=args.moe_groups,
+                         window_cache=False if args.full_local_cache else None)
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    if args.all:
+        archs = archs + list(CLUSTER_CELLS)
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        if arch in CLUSTER_CELLS:
+            for mp in meshes:
+                results.append(run_cell(arch, "step", mp, opts, args.out))
+            continue
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            ok, why = applicable(cfg, SHAPES[shape_name])
+            if not ok:
+                print(f"[SKIP] {arch}__{shape_name}: {why}")
+                continue
+            for mp in meshes:
+                tag = f"{arch}__{shape_name}__{'pod2x16x16' if mp else '16x16'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if "error" not in json.load(f):
+                            print(f"[CACHED] {tag}")
+                            continue
+                results.append(run_cell(arch, shape_name, mp, opts, args.out))
+    failures = [r for r in results if "error" in r]
+    print(f"\n{len(results) - len(failures)}/{len(results)} cells compiled "
+          f"({len(failures)} failures)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

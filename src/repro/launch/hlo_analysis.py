@@ -1,0 +1,104 @@
+"""Roofline terms from a compiled SPMD module (§Roofline methodology).
+
+Sources:
+  · ``compiled.cost_analysis()``   — per-device HLO FLOPs + bytes accessed
+  · ``compiled.as_text()``         — optimized per-device HLO; collective
+    bytes are summed from the *result* sizes of every all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute op
+    (async ``-start`` forms counted once, ``-done`` skipped).
+
+Convention: all quantities are PER CHIP (the SPMD module is the per-device
+program), so  term_seconds = quantity / per-chip-rate.  Hardware constants
+are the v5e-class numbers fixed by the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<rtype>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-chip bytes moved by each collective family + op counts."""
+    out: dict[str, int] = {}
+    counts: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op").replace("-start", "")
+        b = _type_bytes(m.group("rtype"))
+        out[op] = out.get(op, 0) + b
+        counts[op] = counts.get(op, 0) + 1
+    out["_counts"] = counts            # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    flops: float                  # per-chip HLO FLOPs
+    hbm_bytes: float              # per-chip bytes accessed
+    coll_bytes: float             # per-chip collective bytes
+    coll_by_type: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float            # 6·N·D (train) / 2·N·D (inference), per chip
+    useful_ratio: float           # model_flops / HLO flops
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(cost: dict, coll: dict, *, model_flops_per_chip: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    hbm = float(cost.get("bytes accessed", 0.0) or 0.0)
+    cb = float(sum(v for k, v in coll.items() if not k.startswith("_")))
+    terms = {
+        "compute": flops / PEAK_FLOPS,
+        "memory": hbm / HBM_BW,
+        "collective": cb / ICI_BW,
+    }
+    dom = max(terms, key=terms.get)
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, coll_bytes=cb,
+        coll_by_type={k: v for k, v in coll.items() if not k.startswith("_")},
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"], dominant=dom,
+        model_flops=model_flops_per_chip,
+        useful_ratio=(model_flops_per_chip / flops) if flops else 0.0)
+
+
+def memory_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    fields = ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes", "peak_memory_in_bytes")
+    return {f: int(getattr(ma, f, 0) or 0) for f in fields}

@@ -1,0 +1,31 @@
+"""Production mesh builders.
+
+A *function*, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first init).
+
+Topology (TPU v5e-class target):
+  single-pod: (data=16, model=16)            = 256 chips
+  multi-pod:  (pod=2, data=16, model=16)     = 512 chips
+The design scales by growing "pod" (pure DP across pods — only gradient
+all-reduce crosses the DCN) and "data".
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Whatever this host has (tests/examples): (data=N/model, model)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
+                         axis_types=_auto(2))

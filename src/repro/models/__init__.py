@@ -1,0 +1,3 @@
+from . import layers, moe, ssm, transformer, model_zoo
+from .transformer import init_lm, forward, lm_loss, prefill, decode_step
+from .model_zoo import input_specs, cache_struct, init_cache, count_params

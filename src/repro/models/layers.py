@@ -1,0 +1,333 @@
+"""Core transformer layers — pure-functional JAX (init/apply pairs).
+
+Covers every attention variant in the assigned pool: GQA with separate
+head_dim (Qwen3/Nemo style), qk-norm (Qwen3/Gemma3), QKV bias (Qwen2),
+causal / bidirectional (HuBERT) / sliding-window (Gemma3 local) / cross
+(Llama-3.2-Vision), RoPE with per-kind theta, and KV-cache decode.
+
+Attention math can route through the Pallas flash kernel
+(``cfg.use_flash_kernel``) or the pure-jnp path (default — XLA-lowerable on
+any backend; the dry-run uses this path so the compiled HLO is analysable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.hints import hint
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: Params, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"]).astype(x.dtype)
+
+
+def _head_rms(x, eps: float = 1e-6):
+    """Per-head qk-norm (no learned scale folded per-layer for simplicity of
+    the stacked-period parameterisation; Qwen3 uses a learned scale — we keep
+    one, see init_attention)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x [..., S, H, dh], positions [..., S] (broadcastable) → rotated x."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                     # [dh/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(angles)[..., :, None, :]                  # [..., S, 1, dh/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+def _normal(key, shape, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+def init_attention(key, cfg) -> Params:
+    d, h, kvh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    s = 0.02
+    p = {
+        "wq": _normal(ks[0], (d, h * dh), s),
+        "wk": _normal(ks[1], (d, kvh * dh), s),
+        "wv": _normal(ks[2], (d, kvh * dh), s),
+        "wo": _normal(ks[3], (h * dh, d), s / max(1, cfg.n_layers) ** 0.5),
+        "norm": init_rmsnorm(d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((kvh * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((kvh * dh,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((dh,), jnp.float32)
+        p["k_scale"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(p: Params, x, cfg, theta: float, positions):
+    b, s, _ = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dtype = x.dtype
+    q = x @ p["wq"].astype(dtype)
+    k = x @ p["wk"].astype(dtype)
+    v = x @ p["wv"].astype(dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, kvh, dh)
+    v = v.reshape(b, s, kvh, dh)
+    if cfg.qk_norm:
+        q = _head_rms(q) * p["q_scale"].astype(dtype)
+        k = _head_rms(k) * p["k_scale"].astype(dtype)
+    if theta > 0:  # theta ≤ 0 disables RoPE (HuBERT uses none → conv pos stub)
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+_CHUNK_THRESHOLD = 2048   # route long sequences through the O(S) jnp path
+
+
+def _sdpa(q, k, v, *, causal: bool, window: int | None, q_positions=None,
+          kv_positions=None, use_flash: bool = False):
+    """q [B,S,H,dh], k/v [B,Skv,KVH,dh] → [B,S,H,dh].  GQA via reshape —
+    grouped einsum, no K/V duplication (matches the flash kernel contract)."""
+    b, sq, h, dh = q.shape
+    _, skv, kvh, _ = k.shape
+    if use_flash:
+        from repro.kernels.flash_attention import flash_attention
+        o = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=causal,
+                            window=window)
+        return o.transpose(0, 2, 1, 3)
+    if (sq > _CHUNK_THRESHOLD and skv > _CHUNK_THRESHOLD
+            and q_positions is None and kv_positions is None):
+        return _sdpa_chunked(q, k, v, causal=causal, window=window)
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    scale = dh ** -0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = (jnp.arange(sq) if q_positions is None else q_positions)
+    kpos = (jnp.arange(skv) if kv_positions is None else kv_positions)
+    if causal or window is not None:
+        if qpos.ndim == 2:       # per-batch positions [B, sq] (serving slots)
+            rows = qpos[:, :, None]
+            cols = kpos[:, None, :] if kpos.ndim == 2 else kpos[None, None, :]
+            mask = rows >= cols
+            if window is not None:
+                mask = jnp.logical_and(mask, cols > rows - window)
+            scores = jnp.where(mask[:, None, None], scores, -1e30)
+        else:
+            rows, cols = qpos[:, None], kpos[None, :]
+            mask = rows >= cols
+            if window is not None:
+                mask = jnp.logical_and(mask, cols > rows - window)
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, window: int | None,
+                  block_q: int = 512, block_k: int = 1024):
+    """Flash-style online-softmax attention in pure jnp — O(S·d) memory.
+
+    The jnp analogue of kernels/flash_attention (same math, same masking):
+    outer ``lax.map`` over q blocks, inner ``lax.scan`` over kv blocks
+    carrying (m, l, acc).  This is what makes 32k-prefill / 4k-train lower
+    without materialising the [S,S] score matrix.  Positions are implicit
+    (0..S) — the cached-decode path never takes this route.
+    """
+    b, sq, h, dh = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    scale = dh ** -0.5
+    pad_q = (-sq) % block_q
+    pad_k = (-skv) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_k
+    qg = (qp.reshape(b, nq, block_q, kvh, g, dh)
+          .astype(jnp.float32) * scale)
+
+    def q_block(qi):
+        qb = qg[:, qi]                                       # [b,bq,kvh,g,dh]
+        m0 = jnp.full((b, kvh, g, block_q), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, block_q, dh), jnp.float32)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(kp, kj * block_k, block_k, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, kj * block_k, block_k, 1)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb.astype(jnp.float32))
+            rows = qi * block_q + jnp.arange(block_q)[:, None]
+            cols = kj * block_k + jnp.arange(block_k)[None, :]
+            mask = cols < skv                                 # kv padding
+            if causal or window is not None:
+                mask = jnp.logical_and(mask, rows >= cols)
+            if window is not None:
+                mask = jnp.logical_and(mask, cols > rows - window)
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, -1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + jnp.sum(p, -1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-30)[..., None]        # [b,kvh,g,bq,dh]
+
+    blocks = jax.lax.map(q_block, jnp.arange(nq))            # [nq,b,kvh,g,bq,dh]
+    out = blocks.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * block_q, h, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attention(p: Params, x, cfg, *, kind: str = "attn", positions=None,
+              cache=None, cache_pos=None, cross_kv=None):
+    """Pre-norm attention block.
+
+    kind: attn | attn_local | attn_global | cross | attn_bidir
+    cache: None (full forward) or dict(k=[B,Smax,KVH,dh], v=…) for decode;
+    cache_pos: [] int32 — write offset for the new token(s);
+    cross_kv: [B, T_img, D] image/frame embeddings for kind == "cross".
+
+    Returns (out, new_cache).
+    """
+    b, s, d = x.shape
+    theta = cfg.rope_theta
+    window = None
+    causal = not cfg.encoder_only
+    if kind == "attn_local":
+        window = cfg.sliding_window
+    elif kind == "attn_global" and cfg.rope_theta_global is not None:
+        theta = cfg.rope_theta_global
+    elif kind == "cross":
+        causal = False
+
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps)
+    xn = hint(xn, "act_btd")
+
+    if kind == "cross":
+        # q from text stream; k/v from (static) image embeddings
+        kv_src = rmsnorm(p["norm"], cross_kv, cfg.norm_eps) if cfg.cross_norm_kv else cross_kv
+        q, _, _ = _project_qkv(p, xn, cfg, theta=-1.0,
+                               positions=_default_pos(positions, b, s))
+        kvh, dh = cfg.n_kv_heads, cfg.head_dim
+        tk = kv_src.shape[1]
+        k = (kv_src @ p["wk"].astype(x.dtype)).reshape(b, tk, kvh, dh)
+        v = (kv_src @ p["wv"].astype(x.dtype)).reshape(b, tk, kvh, dh)
+        o = _sdpa(q, k, v, causal=False, window=None,
+                  use_flash=cfg.use_flash_kernel)
+        gate = jnp.tanh(p["xgate"].astype(x.dtype)) if "xgate" in p else 1.0
+        out = (o.reshape(b, s, -1) @ p["wo"].astype(x.dtype)) * gate
+        return hint(out, "act_btd"), cache
+
+    positions = _default_pos(positions, b, s)
+    q, k, v = _project_qkv(p, xn, cfg, theta, positions)
+    q = hint(q, "act_bshd")
+
+    if cache is None:
+        o = _sdpa(q, k, v, causal=causal, window=window,
+                  use_flash=cfg.use_flash_kernel)
+        new_cache = None
+    else:
+        pos_arr = jnp.asarray(cache_pos)
+        skv = cache["k"].shape[1]
+        ring = window is not None and skv <= window   # windowed ring buffer
+        write_pos = pos_arr % skv if ring else pos_arr
+        if pos_arr.ndim == 0:     # shared position → dynamic-update-slice
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), write_pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), write_pos, axis=1)
+        else:                     # per-slot positions [B] → scatter
+            rows = jnp.arange(b)
+            ck = cache["k"].at[rows, write_pos].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, write_pos].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        if ring:
+            # slot j holds absolute position p = pos − ((pos − j) mod W);
+            # never-written slots (p < 0) get a sentinel that fails causality
+            slots = jnp.arange(skv)
+            if pos_arr.ndim == 0:
+                kvp = pos_arr - ((pos_arr - slots) % skv)          # [W]
+            else:
+                kvp = pos_arr[:, None] - ((pos_arr[:, None] - slots[None]) % skv)
+            kvp = jnp.where(kvp < 0, 1 << 30, kvp)
+        else:
+            kvp = jnp.arange(skv)
+        o = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=True,
+                  window=window, q_positions=positions,
+                  kv_positions=kvp, use_flash=False)
+    out = o.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+    return hint(out, "act_btd"), new_cache
+
+
+def _default_pos(positions, b, s):
+    return jnp.arange(s) if positions is None else positions
+
+
+def init_cross_attention(key, cfg) -> Params:
+    p = init_attention(key, cfg)
+    p["xgate"] = jnp.zeros((), jnp.float32)   # tanh-gated, starts closed
+    return p
+
+
+# --------------------------------------------------------------------------
+# Dense MLP (SwiGLU)
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, n_layers: int = 1) -> Params:
+    ks = jax.random.split(key, 3)
+    s = 0.02
+    return {
+        "w_gate": _normal(ks[0], (d, f), s),
+        "w_up": _normal(ks[1], (d, f), s),
+        "w_down": _normal(ks[2], (f, d), s / max(1, n_layers) ** 0.5),
+        "norm": init_rmsnorm(d),
+    }
+
+
+def mlp(p: Params, x, eps: float = 1e-6):
+    xn = rmsnorm(p["norm"], x, eps)
+    dtype = x.dtype
+    g = jax.nn.silu(xn @ p["w_gate"].astype(dtype))
+    u = xn @ p["w_up"].astype(dtype)
+    h = hint(g * u, "act_btf")
+    return h @ p["w_down"].astype(dtype)

@@ -1,0 +1,122 @@
+"""Zoo utilities: parameter counting, cache construction, input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of a (architecture × shape) cell — weak-type-correct, shardable,
+zero allocation — consumed by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeConfig
+from . import transformer, ssm
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    """Parameter count from the init structure via eval_shape (no alloc)."""
+    shapes = jax.eval_shape(lambda k: transformer.init_lm(k, cfg),
+                            jax.random.PRNGKey(0))
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        if active_only and cfg.moe is not None:
+            names = "/".join(str(p) for p in path)
+            if any(w in names for w in ("w_gate", "w_up", "w_down")) \
+                    and "moe" in names and "shared" not in names:
+                # only top_k of n_experts are active per token
+                n = n * cfg.moe.top_k // cfg.moe.n_experts
+        total += n
+    return int(total)
+
+
+# --------------------------------------------------------------------------
+# Cache structure (shape-level; serving allocates, dry-run uses specs)
+# --------------------------------------------------------------------------
+
+def cache_struct(cfg, batch: int, max_seq: int):
+    """ShapeDtypeStruct pytree matching prefill's cache output."""
+    p_n = cfg.n_periods
+    kvh, dh = cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.act_dtype
+    caches = {}
+    for pos, kind in enumerate(cfg.period):
+        if kind in ("attn", "attn_local", "attn_global"):
+            seq = max_seq
+            if (kind == "attn_local" and cfg.sliding_window
+                    and cfg.windowed_local_cache):
+                seq = min(max_seq, cfg.sliding_window)   # ring buffer
+            caches[f"pos{pos}"] = {
+                "k": jax.ShapeDtypeStruct((p_n, batch, seq, kvh, dh), dt),
+                "v": jax.ShapeDtypeStruct((p_n, batch, seq, kvh, dh), dt),
+            }
+        elif kind == "mamba":
+            d_in, _, n, d_conv = ssm.mamba_dims(cfg)
+            caches[f"pos{pos}"] = {
+                "h": jax.ShapeDtypeStruct((p_n, batch, d_in, n), jnp.float32),
+                "conv": jax.ShapeDtypeStruct((p_n, batch, d_conv - 1, d_in),
+                                             jnp.float32),
+            }
+        elif kind == "mlstm":
+            d_in, h, dhh = ssm.mlstm_dims(cfg)
+            caches[f"pos{pos}"] = {
+                "s0": jax.ShapeDtypeStruct((p_n, batch, h, dhh, dhh), jnp.float32),
+                "s1": jax.ShapeDtypeStruct((p_n, batch, h, dhh), jnp.float32),
+                "s2": jax.ShapeDtypeStruct((p_n, batch, h), jnp.float32),
+            }
+        elif kind == "slstm":
+            d = cfg.d_model
+            caches[f"pos{pos}"] = {
+                f"s{i}": jax.ShapeDtypeStruct((p_n, batch, d), jnp.float32)
+                for i in range(4)}
+        # cross: static image kv, recomputed per step — no cache entry
+    return caches
+
+
+def init_cache(cfg, batch: int, max_seq: int):
+    """Zero-filled cache pytree (serving)."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_struct(cfg, batch, max_seq))
+
+
+# --------------------------------------------------------------------------
+# Input specs per (arch × shape) — dry-run stand-ins
+# --------------------------------------------------------------------------
+
+def input_specs(cfg, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = cfg.act_dtype
+    if shape.kind == "train":
+        if cfg.encoder_only:           # masked-prediction training (HuBERT)
+            return {
+                "embeddings": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                "targets": jax.ShapeDtypeStruct((b, s), i32),
+                "mask": jax.ShapeDtypeStruct((b, s), jnp.bool_),
+            }
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.cross_attn_tokens, cfg.d_model), dt)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.embeddings_input and cfg.family == "audio":
+            return {"embeddings": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)}
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.cross_attn_tokens, cfg.d_model), dt)
+        return batch
+    if shape.kind == "decode":
+        batch = {
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "caches": cache_struct(cfg, b, s),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.cross_attn_tokens, cfg.d_model), dt)
+        return batch
+    raise ValueError(shape.kind)

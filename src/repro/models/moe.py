@@ -1,0 +1,170 @@
+"""Mixture-of-Experts layer — static-capacity, sort-based dispatch.
+
+Dispatch avoids the dense [T, E, C] one-hot einsum (at 128 experts it costs
+more FLOPs than the experts themselves): tokens' (slot → expert) assignments
+are sorted by expert, ranks within each expert computed from cumulative
+counts, and tokens scattered into an [E, C, D] buffer.  Tokens over capacity
+are dropped (contribute zero — standard Switch behaviour); capacity factor
+is configurable per arch.
+
+Expert parallelism: the [E, C, D] buffer and [E, …] weights carry "expert"
+sharding hints, so under the production mesh experts live sharded over the
+"model" axis and XLA inserts the token all-to-alls.  Router is replicated.
+
+Variants covered: top-1 + shared expert (Llama-4-Scout), top-8 of 128
+(Qwen3-MoE), top-2 of 16 on alternating layers (Jamba).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.hints import hint
+from .layers import Params, init_rmsnorm, rmsnorm, init_mlp, mlp, _normal
+
+
+def init_moe(key, cfg) -> Params:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    ks = jax.random.split(key, 5)
+    s = 0.02
+    p = {
+        "router": _normal(ks[0], (d, e), s),
+        "w_gate": _normal(ks[1], (e, d, f), s),
+        "w_up": _normal(ks[2], (e, d, f), s),
+        "w_down": _normal(ks[3], (e, f, d), s / max(1, cfg.n_layers) ** 0.5),
+        "norm": init_rmsnorm(d),
+    }
+    if m.shared_expert:
+        p["shared"] = init_mlp(ks[4], d, f, cfg.n_layers)
+    return p
+
+
+def _capacity(t: int, m) -> int:
+    c = int(t * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, -(-c // 8) * 8)   # round up to 8 (sublane alignment)
+
+
+def _dispatch_combine(xn, top_p, top_e, expert_fn, e: int, k: int, cap: int,
+                      dtype):
+    """Sort-based scatter → expert_fn([E,C,D]) → weighted gather, for one
+    dispatch group.  ``expert_fn`` runs the expert einsums."""
+    t = xn.shape[0]
+    d = xn.shape[-1]
+    flat_e = top_e.reshape(-1)                               # [T*k]
+    order = jnp.argsort(flat_e)                              # stable
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts                     # [E]
+    rank_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    rank = jnp.zeros((t * k,), jnp.int32).at[order].set(rank_sorted)
+    keep = rank < cap                                        # over-capacity drop
+
+    src_tok = jnp.arange(t * k, dtype=jnp.int32) // k        # token of each slot
+    buf_idx = jnp.where(keep, flat_e * cap + rank, e * cap)  # sentinel row
+    buffer = jnp.zeros((e * cap + 1, d), dtype).at[buf_idx].set(xn[src_tok])
+    out_buf = expert_fn(buffer[:-1].reshape(e, cap, d))      # [E, C, D]
+
+    flat_out = jnp.concatenate(
+        [out_buf.reshape(e * cap, d), jnp.zeros((1, d), dtype)])
+    slot_out = flat_out[buf_idx]                             # [T*k,D] (0 if drop)
+    weighted = slot_out * top_p.reshape(-1)[:, None].astype(dtype)
+    return jnp.sum(weighted.reshape(t, k, d), axis=1)
+
+
+def moe(p: Params, x, cfg):
+    """x [B, S, D] → [B, S, D].  Returns (out, aux) with load-balance loss.
+
+    ``cfg.moe_dispatch_groups = G > 1`` (§Perf hillclimb #2) splits tokens
+    into G groups dispatched independently (vmap): with G aligned to the DP
+    shard count, scatter/gather stay shard-local and the only cross-shard
+    traffic is the [G,E,C,D] buffer all-to-all into expert-parallel layout.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.n_experts, m.top_k
+    cap = _capacity(t, m)
+    dtype = x.dtype
+
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps).reshape(t, d)
+
+    # --- routing (f32 for numerics) ---
+    logits = xn.astype(jnp.float32) @ p["router"]            # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                   # [T, k]
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch): E · Σ_e f_e · P_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    groups = cfg.moe_dispatch_groups
+    if groups > 1 and t % groups == 0:
+        tg = t // groups
+        cap_g = max(8, -(-cap // groups) // 8 * 8 + 8)
+
+        def expert_fn_grouped(buffers):                      # [G, E, Cg, D]
+            buffers = hint(buffers, "moe_gecd_ep")           # a2a: G→E layout
+            g_ = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buffers,
+                                        p["w_gate"].astype(dtype)))
+            u_ = jnp.einsum("gecd,edf->gecf", buffers, p["w_up"].astype(dtype))
+            h_ = hint(g_ * u_, "moe_gecf_ep")
+            ob = jnp.einsum("gecf,efd->gecd", h_, p["w_down"].astype(dtype))
+            return hint(ob, "moe_gecd_dp")                   # a2a back: E→G
+
+        xg = hint(xn.reshape(groups, tg, d), "moe_gtd")
+        pg = top_p.reshape(groups, tg, k)
+        eg = top_e.reshape(groups, tg, k)
+        # vmapped local dispatch; expert compute batched over groups afterwards
+        buffers = jax.vmap(
+            lambda xx, pp, ee: _scatter_only(xx, pp, ee, e, k, cap_g, dtype)
+        )(xg, pg, eg)
+        out_buf = expert_fn_grouped(buffers[0])
+        out = jax.vmap(
+            lambda ob, idx, pp: _gather_only(ob, idx, pp, e, cap_g, dtype)
+        )(out_buf, buffers[1], pg).reshape(t, d)
+    else:
+        def expert_fn(buffer):                               # [E, C, D]
+            buffer = hint(buffer, "moe_ecd")
+            g_ = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buffer,
+                                        p["w_gate"].astype(dtype)))
+            u_ = jnp.einsum("ecd,edf->ecf", buffer, p["w_up"].astype(dtype))
+            h_ = hint(g_ * u_, "moe_ecf")
+            ob = jnp.einsum("ecf,efd->ecd", h_, p["w_down"].astype(dtype))
+            return hint(ob, "moe_ecd")
+
+        out = _dispatch_combine(xn, top_p, top_e, expert_fn, e, k, cap, dtype)
+
+    if m.shared_expert:
+        out = out + mlp(p["shared"], x, cfg.norm_eps).reshape(t, d)
+
+    return out.reshape(b, s, d), aux
+
+
+def _scatter_only(xn, top_p, top_e, e, k, cap, dtype):
+    """Per-group scatter → ([E,C,D] buffer, buf_idx) for the grouped path."""
+    t, d = xn.shape
+    flat_e = top_e.reshape(-1)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    rank = jnp.zeros((t * k,), jnp.int32).at[order].set(rank_sorted)
+    keep = rank < cap
+    src_tok = jnp.arange(t * k, dtype=jnp.int32) // k
+    buf_idx = jnp.where(keep, flat_e * cap + rank, e * cap)
+    buffer = jnp.zeros((e * cap + 1, d), dtype).at[buf_idx].set(xn[src_tok])
+    return buffer[:-1].reshape(e, cap, d), buf_idx
+
+
+def _gather_only(out_buf, buf_idx, top_p, e, cap, dtype):
+    t, k = top_p.shape
+    d = out_buf.shape[-1]
+    flat_out = jnp.concatenate(
+        [out_buf.reshape(e * cap, d), jnp.zeros((1, d), dtype)])
+    slot_out = flat_out[buf_idx]
+    weighted = slot_out * top_p.reshape(-1)[:, None].astype(dtype)
+    return jnp.sum(weighted.reshape(t, k, d), axis=1)

@@ -1,0 +1,351 @@
+"""State-space / recurrent blocks: Mamba S6 (Jamba) and xLSTM (mLSTM, sLSTM).
+
+All three are linear-state recurrences: O(1) state per layer, which is what
+makes the `long_500k` decode shape tractable for these families.  Training
+uses ``lax.scan`` over time with per-step gate computation (the [B,S,d_in,N]
+discretised-A tensor is never materialised — DESIGN.md hardware-adaptation
+note); decode reuses the same cell functions one step at a time.
+
+Simplifications vs. the reference CUDA implementations (documented):
+  · Mamba: recurrent scan instead of the chunked parallel scan kernel — the
+    HLO stays one While op (compile-friendly); a Pallas chunked scan is the
+    listed TPU follow-up.
+  · mLSTM: no short conv on the qkv branch; plain per-head projections.
+  · sLSTM: block-diagonal (per-head) recurrent matrices, as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.hints import hint
+from .layers import Params, init_rmsnorm, rmsnorm, _normal
+
+
+# --------------------------------------------------------------------------
+# Mamba (S6)
+# --------------------------------------------------------------------------
+
+def mamba_dims(cfg):
+    d = cfg.d_model
+    mc = cfg.mamba
+    d_in = mc.expand * d
+    dt_rank = max(1, -(-d // 16))
+    return d_in, dt_rank, mc.d_state, mc.d_conv
+
+
+def init_mamba(key, cfg) -> Params:
+    d = cfg.d_model
+    d_in, dt_rank, n, d_conv = mamba_dims(cfg)
+    ks = jax.random.split(key, 7)
+    s = 0.02
+    # S4D-real initialisation for A
+    a_init = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, n))
+    return {
+        "norm": init_rmsnorm(d),
+        "in_proj": _normal(ks[0], (d, 2 * d_in), s),
+        "conv_w": _normal(ks[1], (d_conv, d_in), 0.2),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "x_proj": _normal(ks[2], (d_in, dt_rank + 2 * n), s),
+        "dt_w": _normal(ks[3], (dt_rank, d_in), s),
+        "dt_b": jnp.log(jnp.expm1(jnp.full((d_in,), 1e-2))),  # softplus⁻¹(0.01)
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": _normal(ks[4], (d_in, d), s / max(1, cfg.n_layers) ** 0.5),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along S: x [B,S,C], w [K,C] → [B,S,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):   # K is 4 — unrolled adds, no conv primitive needed
+        out = out + pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _mamba_cell(h, a_neg, dt, bmat, cmat, xt):
+    """One S6 step. h [B,d_in,N]; dt/xt [B,d_in]; bmat/cmat [B,N]."""
+    da = jnp.exp(dt[..., None] * a_neg[None])                 # [B,d_in,N]
+    dbx = (dt * xt)[..., None] * bmat[:, None, :]             # [B,d_in,N]
+    h = da * h + dbx
+    y = jnp.sum(h * cmat[:, None, :], axis=-1)                # [B,d_in]
+    return h, y
+
+
+def mamba(p: Params, x, cfg, state=None, conv_state=None):
+    """x [B,S,D] → ([B,S,D], (state, conv_state)).
+
+    state: [B,d_in,N] recurrent state (decode); conv_state: [B,K-1,d_in].
+    When state is None (training/prefill) both start at zero and the final
+    states are returned for cache hand-off.
+    """
+    b, s, d = x.shape
+    d_in, dt_rank, n, d_conv = mamba_dims(cfg)
+    dtype = x.dtype
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps)
+
+    xz = xn @ p["in_proj"].astype(dtype)
+    x1, z = jnp.split(xz, 2, axis=-1)                        # [B,S,d_in] ×2
+
+    if conv_state is not None:   # decode: prepend cached inputs
+        full = jnp.concatenate([conv_state.astype(dtype), x1], axis=1)
+        conv_out = _causal_conv(full, p["conv_w"].astype(dtype),
+                                p["conv_b"].astype(dtype))[:, -s:]
+        new_conv = full[:, -(d_conv - 1):]
+    else:
+        conv_out = _causal_conv(x1, p["conv_w"].astype(dtype),
+                                p["conv_b"].astype(dtype))
+        new_conv = x1[:, -(d_conv - 1):]
+    x1 = jax.nn.silu(conv_out)
+
+    dbc = x1 @ p["x_proj"].astype(dtype)
+    dt_raw, bmat, cmat = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_w"].astype(dtype)
+                         + p["dt_b"].astype(dtype))          # [B,S,d_in]
+    a_neg = -jnp.exp(p["A_log"])                             # [d_in,N] f32
+
+    h0 = (jnp.zeros((b, d_in, n), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp
+        h, y = _mamba_cell(h, a_neg, dt_t.astype(jnp.float32),
+                           b_t.astype(jnp.float32), c_t.astype(jnp.float32),
+                           x_t.astype(jnp.float32))
+        return h, y
+
+    xs = (dt.swapaxes(0, 1), bmat.swapaxes(0, 1), cmat.swapaxes(0, 1),
+          x1.swapaxes(0, 1))                                 # time-major
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1).astype(dtype)                      # [B,S,d_in]
+    y = y + p["D"].astype(dtype) * x1
+    out = (y * jax.nn.silu(z)) @ p["out_proj"].astype(dtype)
+    return hint(out, "act_btd"), (h_final, new_conv)
+
+
+# --------------------------------------------------------------------------
+# xLSTM — mLSTM (matrix memory)
+# --------------------------------------------------------------------------
+
+def mlstm_dims(cfg):
+    d = cfg.d_model
+    d_in = int(cfg.xlstm_mlstm_proj * d)
+    h = cfg.n_heads
+    return d_in, h, d_in // h
+
+
+def init_mlstm(key, cfg) -> Params:
+    d = cfg.d_model
+    d_in, h, dh = mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    s = 0.02
+    return {
+        "norm": init_rmsnorm(d),
+        "up": _normal(ks[0], (d, 2 * d_in), s),
+        "wq": _normal(ks[1], (d_in, d_in), s),
+        "wk": _normal(ks[2], (d_in, d_in), s),
+        "wv": _normal(ks[3], (d_in, d_in), s),
+        "wi": _normal(ks[4], (d_in, h), s),
+        "bi": jnp.zeros((h,), jnp.float32),
+        "wf": _normal(ks[5], (d_in, h), s),
+        "bf": jnp.full((h,), 3.0),     # forget-gate bias: remember by default
+        "gnorm": jnp.ones((d_in,), jnp.float32),
+        "down": _normal(ks[6], (d_in, d), s / max(1, cfg.n_layers) ** 0.5),
+    }
+
+
+def _mlstm_cell(carry, q, k, v, i_raw, f_raw):
+    """Stabilised mLSTM step. carry = (C [B,H,dh,dh], n [B,H,dh], m [B,H])."""
+    C, n, m = carry
+    f_log = jax.nn.log_sigmoid(f_raw)                        # [B,H]
+    m_new = jnp.maximum(f_log + m, i_raw)
+    i_p = jnp.exp(i_raw - m_new)[..., None]                  # [B,H,1]
+    f_p = jnp.exp(f_log + m - m_new)[..., None]
+    C = f_p[..., None] * C + i_p[..., None] * (v[..., :, None] * k[..., None, :])
+    n = f_p * n + i_p * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)                  # C qᵀ
+    den = jnp.maximum(jnp.abs(jnp.sum(n * q, -1)), 1.0)[..., None]
+    return (C, n, m_new), num / den                          # h_t [B,H,dh]
+
+
+def _mlstm_chunked(state, q, k, v, i_raw, f_raw, chunk: int):
+    """Chunkwise-parallel mLSTM — exact reimplementation of the sequential
+    stabilised cell (same m_t sequence, same clamp), with intra-chunk work as
+    [L,L]×[L,dh] matmuls and states touched once per chunk.
+
+    Unrolling the cell gives, with b_t = Σ_{s≤t} logσ(f_s) (within-chunk
+    cumulative) and m_t = max(m₀ + b_t, max_{s≤t}(b_t − b_s + i_s)):
+
+        C_t = e^{m₀+b_t−m_t}·C₀ + Σ_{s≤t} e^{b_t−b_s+i_s−m_t} v_s k_sᵀ
+        n_t = e^{m₀+b_t−m_t}·n₀ + Σ_{s≤t} e^{b_t−b_s+i_s−m_t} k_s
+        h_t = (q_t·C_t) / max(|n_t·q_t|, 1)
+
+    q/k/v [B,S,H,dh] f32, i/f [B,S,H] f32.  Returns (state, h [B,S,H·dh]).
+    """
+    b, s, h, dh = q.shape
+    n_chunks = s // chunk
+    qc = q.reshape(b, n_chunks, chunk, h, dh).swapaxes(0, 1)  # [N,B,L,H,dh]
+    kc = k.reshape(b, n_chunks, chunk, h, dh).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, chunk, h, dh).swapaxes(0, 1)
+    ic = i_raw.reshape(b, n_chunks, chunk, h).swapaxes(0, 1)  # [N,B,L,H]
+    fc = f_raw.reshape(b, n_chunks, chunk, h).swapaxes(0, 1)
+
+    def one_chunk(carry, xs):
+        C0, n0, m0 = carry                       # [B,H,dh,dh],[B,H,dh],[B,H]
+        qb, kb, vb, ib, fb = xs                  # [B,L,H,dh] / [B,L,H]
+        blog = jnp.cumsum(jax.nn.log_sigmoid(fb), axis=1)     # [B,L,H] b_t
+        # m_t = max(m₀ + b_t, running-max_{s≤t}(b_t − b_s + i_s))
+        g = ib - blog                            # [B,L,H]  (i_s − b_s)
+        gmax = jax.lax.cummax(g, axis=1)
+        m = jnp.maximum(m0[:, None] + blog, blog + gmax)      # [B,L,H]
+        # decay matrix D[t,s] = exp(b_t − b_s + i_s − m_t), s ≤ t
+        expo = (blog[:, :, None] - blog[:, None, :] + ib[:, None, :]
+                - m[:, :, None])                 # [B,L,L,H]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.where(tri[None, :, :, None], jnp.exp(expo), 0.0)
+        scores = jnp.einsum("blhd,bshd->blsh", qb, kb)        # [B,L,L,H]
+        w = scores * D
+        intra_num = jnp.einsum("blsh,bshd->blhd", w, vb)      # [B,L,H,dh]
+        intra_den = jnp.sum(w, axis=2)                        # [B,L,H]
+        alpha = jnp.exp(m0[:, None] + blog - m)               # [B,L,H]
+        # reference contracts q with C's SECOND index (C[d,e] ~ v_d k_e)
+        inter_num = alpha[..., None] * jnp.einsum("blhe,bhde->blhd", qb, C0)
+        inter_den = alpha * jnp.einsum("blhd,bhd->blh", qb, n0)
+        den = jnp.maximum(jnp.abs(inter_den + intra_den), 1.0)[..., None]
+        hs = (inter_num + intra_num) / den                    # [B,L,H,dh]
+        # carry to next chunk (t = L)
+        mL = m[:, -1]                                         # [B,H]
+        bL = blog[:, -1]                                      # [B,H]
+        wL = jnp.exp(bL[:, None] - blog + ib - mL[:, None])   # [B,L,H]
+        beta = jnp.exp(m0 + bL - mL)                          # [B,H]
+        C_new = (beta[..., None, None] * C0
+                 + jnp.einsum("blh,blhd,blhe->bhde", wL, vb, kb))
+        n_new = beta[..., None] * n0 + jnp.einsum("blh,blhd->bhd", wL, kb)
+        return (C_new, n_new, mL), hs
+
+    carry, hs = jax.lax.scan(one_chunk, state, (qc, kc, vc, ic, fc))
+    # hs [N,B,L,H,dh] → [B,S,H·dh]
+    out = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, h * dh)
+    return carry, out
+
+
+def mlstm(p: Params, x, cfg, state=None):
+    """x [B,S,D] → ([B,S,D], state). state = (C, n, m).
+
+    ``cfg.xlstm_chunk > 0`` routes through the chunkwise-parallel form
+    (identical math, §Perf hillclimb #1): per-token state IO becomes
+    per-chunk [L,L]/[L,dh] matmuls — the roofline memory term drops ≈ L×.
+    """
+    b, s, d = x.shape
+    d_in, h, dh = mlstm_dims(cfg)
+    dtype = x.dtype
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps)
+    a, z = jnp.split(xn @ p["up"].astype(dtype), 2, axis=-1)  # [B,S,d_in]
+
+    def heads(w):
+        return (a @ w.astype(dtype)).reshape(b, s, h, dh).astype(jnp.float32)
+    q, k, v = heads(p["wq"]), heads(p["wk"]) * dh ** -0.5, heads(p["wv"])
+    i_raw = (a @ p["wi"].astype(dtype) + p["bi"].astype(dtype)).astype(jnp.float32)
+    f_raw = (a @ p["wf"].astype(dtype) + p["bf"].astype(dtype)).astype(jnp.float32)
+
+    if state is None:
+        state = (jnp.zeros((b, h, dh, dh), jnp.float32),
+                 jnp.zeros((b, h, dh), jnp.float32),
+                 jnp.full((b, h), -1e30, jnp.float32))
+
+    chunk = getattr(cfg, "xlstm_chunk", 0)
+    if chunk and s > 1 and s % chunk == 0:
+        state, hs_bsd = _mlstm_chunked(state, q, k, v, i_raw, f_raw, chunk)
+        ht = hs_bsd.reshape(b, s, d_in)
+    else:
+        def step(carry, inp):
+            qt, kt, vt, it, ft = inp
+            return _mlstm_cell(carry, qt, kt, vt, it, ft)
+
+        xs = tuple(t.swapaxes(0, 1) for t in (q, k, v, i_raw, f_raw))
+        state, hs = jax.lax.scan(step, state, xs)
+        ht = hs.swapaxes(0, 1).reshape(b, s, d_in)            # [B,S,d_in]
+    # per-head group norm
+    hg = ht.reshape(b, s, h, dh)
+    mu = jnp.mean(hg, -1, keepdims=True)
+    var = jnp.var(hg, -1, keepdims=True)
+    ht = ((hg - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(b, s, d_in)
+    ht = (ht * p["gnorm"]).astype(dtype)
+    out = (ht * jax.nn.silu(z)) @ p["down"].astype(dtype)
+    return hint(out, "act_btd"), state
+
+
+# --------------------------------------------------------------------------
+# xLSTM — sLSTM (scalar memory, per-head recurrent mixing)
+# --------------------------------------------------------------------------
+
+def init_slstm(key, cfg) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 4)
+    s = 0.02
+    f_ff = int(cfg.xlstm_slstm_proj * d)
+    return {
+        "norm": init_rmsnorm(d),
+        "w": _normal(ks[0], (d, 4 * d), s),                  # i,f,z,o from x
+        "r": _normal(ks[1], (h, dh, 4 * dh), s),             # block-diag recurrent
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "gnorm": jnp.ones((d,), jnp.float32),
+        # post-block GLU FFN, proj factor 4/3
+        "ff_gate": _normal(ks[2], (d, f_ff), s),
+        "ff_up": _normal(ks[2], (d, f_ff), s),
+        "ff_down": _normal(ks[3], (f_ff, d), s / max(1, cfg.n_layers) ** 0.5),
+    }
+
+
+def _slstm_cell(carry, wx_t, r, h_heads):
+    """carry = (c, n, m, h) each [B,d]; wx_t [B,4d] precomputed Wx."""
+    c, n, m, hprev = carry
+    b, d = c.shape
+    nh, dh, _ = r.shape
+    hp = hprev.reshape(b, nh, dh)
+    rec = jnp.einsum("bhe,hef->bhf", hp, r).reshape(b, 4 * d)
+    gates = wx_t + rec
+    i_raw, f_raw, z_raw, o_raw = jnp.split(gates, 4, axis=-1)
+    f_log = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(f_log + m, i_raw)
+    i_p = jnp.exp(i_raw - m_new)
+    f_p = jnp.exp(f_log + m - m_new)
+    c = f_p * c + i_p * jnp.tanh(z_raw)
+    n = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h_new), h_new
+
+
+def slstm(p: Params, x, cfg, state=None):
+    """x [B,S,D] → ([B,S,D], state). state = (c, n, m, h)."""
+    b, s, d = x.shape
+    h_heads = cfg.n_heads
+    dtype = x.dtype
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps)
+    wx = (xn @ p["w"].astype(dtype) + p["b"].astype(dtype)).astype(jnp.float32)
+
+    if state is None:
+        zero = jnp.zeros((b, d), jnp.float32)
+        state = (zero, zero, jnp.full((b, d), -1e30, jnp.float32), zero)
+
+    r = p["r"].astype(jnp.float32)
+
+    def step(carry, wx_t):
+        return _slstm_cell(carry, wx_t, r, h_heads)
+
+    state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+    ht = hs.swapaxes(0, 1)                                   # [B,S,d]
+    hg = ht.reshape(b, s, h_heads, d // h_heads)
+    mu = jnp.mean(hg, -1, keepdims=True)
+    var = jnp.var(hg, -1, keepdims=True)
+    ht = ((hg - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(b, s, d)
+    out = (ht * p["gnorm"]).astype(dtype)
+    # GLU FFN (proj factor 4/3)
+    g = jax.nn.silu(out @ p["ff_gate"].astype(dtype))
+    u = out @ p["ff_up"].astype(dtype)
+    return (g * u) @ p["ff_down"].astype(dtype), state

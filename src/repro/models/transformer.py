@@ -1,0 +1,299 @@
+"""Model assembly: period-scanned heterogeneous stacks.
+
+A model is ``n_periods`` repetitions of a *period* (tuple of layer kinds).
+Parameters for each period position are stacked over periods ([P, ...]
+leaves) and the stack runs under ``jax.lax.scan`` — HLO stays one While op
+regardless of depth (48-layer models compile like 1-period models), remat
+applies per period, and decode threads per-period cache slices through the
+scan.
+
+Entry points:
+  init_lm(key, cfg)                         → params
+  forward(params, cfg, tokens/embeddings)   → (logits, aux)           train fwd
+  lm_loss(params, cfg, batch)               → (loss, metrics)
+  prefill(params, cfg, batch)               → (logits, caches)        serving
+  decode_step(params, cfg, token, caches, pos) → (logits, new caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.hints import hint
+from . import layers, moe as moe_mod, ssm
+from .layers import Params
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def _init_block(key, cfg, period_pos: int) -> Params:
+    kind = cfg.period[period_pos]
+    k1, k2 = jax.random.split(key)
+    p: Params = {}
+    if kind in ("attn", "attn_local", "attn_global"):
+        p["attn"] = layers.init_attention(k1, cfg)
+    elif kind == "cross":
+        p["attn"] = layers.init_cross_attention(k1, cfg)
+    elif kind == "mamba":
+        p["mamba"] = ssm.init_mamba(k1, cfg)
+    elif kind == "mlstm":
+        p["cell"] = ssm.init_mlstm(k1, cfg)
+    elif kind == "slstm":
+        p["cell"] = ssm.init_slstm(k1, cfg)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    if cfg.has_ffn_at(period_pos):
+        if cfg.moe_at(period_pos):
+            p["moe"] = moe_mod.init_moe(k2, cfg)
+        else:
+            p["mlp"] = layers.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.n_layers)
+    return p
+
+
+def init_lm(key, cfg) -> Params:
+    keys = jax.random.split(key, len(cfg.period) + 3)
+    params: Params = {"blocks": {}}
+    for pos in range(len(cfg.period)):
+        pkeys = jax.random.split(keys[pos], cfg.n_periods)
+        params["blocks"][f"pos{pos}"] = jax.vmap(
+            lambda k, _pos=pos: _init_block(k, cfg, _pos))(pkeys)
+    # audio-family stubs take frame embeddings directly — no token table;
+    # VLMs keep the text embedding table (images enter via cross-attention).
+    if not (cfg.embeddings_input and cfg.family == "audio"):
+        params["embed"] = (jax.random.normal(keys[-3], (cfg.vocab, cfg.d_model))
+                           * 0.02).astype(jnp.float32)
+    params["final_norm"] = layers.init_rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab))
+                          * 0.02).astype(jnp.float32)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Period application (shared by train fwd / prefill / decode)
+# --------------------------------------------------------------------------
+
+def _apply_block(bp: Params, h, cfg, pos: int, *, mode: str, cache=None,
+                 cache_pos=None, image_embeds=None, positions=None):
+    """One layer (sublayer + optional FFN). Returns (h, new_cache, aux)."""
+    kind = cfg.period[pos]
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+    if kind in ("attn", "attn_local", "attn_global"):
+        if mode == "forward":
+            att, _ = layers.attention(bp["attn"], h, cfg, kind=kind,
+                                      positions=positions)
+        elif mode == "prefill":
+            att, new_cache = _attn_prefill(bp["attn"], h, cfg, kind, positions)
+        else:  # decode
+            att, new_cache = layers.attention(bp["attn"], h, cfg, kind=kind,
+                                              positions=positions, cache=cache,
+                                              cache_pos=cache_pos)
+        h = h + att
+    elif kind == "cross":
+        att, _ = layers.attention(bp["attn"], h, cfg, kind="cross",
+                                  positions=positions, cross_kv=image_embeds)
+        h = h + att
+    elif kind == "mamba":
+        state = None if cache is None else cache["h"]
+        conv = None if cache is None else cache["conv"]
+        out, (hs, cs) = ssm.mamba(bp["mamba"], h, cfg, state=state,
+                                  conv_state=conv)
+        h = h + out
+        if mode != "forward":
+            new_cache = {"h": hs, "conv": cs.astype(jnp.float32)}
+    elif kind in ("mlstm", "slstm"):
+        fn = ssm.mlstm if kind == "mlstm" else ssm.slstm
+        state = None if cache is None else tuple(cache[f"s{i}"]
+                                                 for i in range(_n_states(kind)))
+        out, new_state = fn(bp["cell"], h, cfg, state=state)
+        h = h + out
+        if mode != "forward":
+            new_cache = {f"s{i}": s for i, s in enumerate(new_state)}
+    if cfg.has_ffn_at(pos):
+        if cfg.moe_at(pos):
+            out, aux = moe_mod.moe(bp["moe"], h, cfg)
+        else:
+            out = layers.mlp(bp["mlp"], h, cfg.norm_eps)
+        h = h + out
+    return h, new_cache, aux
+
+
+def _n_states(kind: str) -> int:
+    return 3 if kind == "mlstm" else 4
+
+
+def _attn_prefill(p, h, cfg, kind, positions):
+    """Full attention forward that also returns the (k, v) cache."""
+    b, s, d = h.shape
+    theta = cfg.rope_theta
+    window = None
+    if kind == "attn_local":
+        window = cfg.sliding_window
+    elif kind == "attn_global" and cfg.rope_theta_global is not None:
+        theta = cfg.rope_theta_global
+    xn = layers.rmsnorm(p["norm"], h, cfg.norm_eps)
+    pos = jnp.arange(s) if positions is None else positions
+    q, k, v = layers._project_qkv(p, xn, cfg, theta, pos)
+    o = layers._sdpa(q, k, v, causal=not cfg.encoder_only, window=window,
+                     use_flash=cfg.use_flash_kernel)
+    out = o.reshape(b, s, -1) @ p["wo"].astype(h.dtype)
+    if (kind == "attn_local" and window is not None
+            and cfg.windowed_local_cache and s >= window):
+        # emit the ring buffer: the last `window` positions at slots p % W
+        idx = jnp.arange(s - window, s) % window
+        ck = jnp.zeros((b, window) + k.shape[2:], k.dtype).at[:, idx].set(
+            k[:, s - window:])
+        cv = jnp.zeros((b, window) + v.shape[2:], v.dtype).at[:, idx].set(
+            v[:, s - window:])
+        return hint(out, "act_btd"), {"k": ck, "v": cv}
+    return hint(out, "act_btd"), {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------------
+# Forward / loss
+# --------------------------------------------------------------------------
+
+def _embed(params, cfg, tokens=None, embeddings=None):
+    if embeddings is not None:
+        return embeddings.astype(cfg.act_dtype)
+    h = params["embed"][tokens]
+    return hint(h.astype(cfg.act_dtype), "act_btd")
+
+
+def _unembed(params, cfg, h):
+    h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = h @ w.astype(h.dtype)
+    return hint(logits, "logits_btv")
+
+
+def _scan_periods(params, cfg, h, *, mode: str, caches=None, cache_pos=None,
+                  image_embeds=None, positions=None):
+    """Run the stacked periods. Returns (h, new_caches, aux_total)."""
+    n_pos = len(cfg.period)
+
+    remat_blocks = cfg.remat == "period" and mode == "forward"
+
+    def period_fn(h, xs):
+        blocks, caches_p = xs
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches_p = {}
+        for pos in range(n_pos):
+            cache = None if caches_p is None else caches_p.get(f"pos{pos}")
+            block_fn = functools.partial(
+                _apply_block, cfg=cfg, pos=pos, mode=mode,
+                cache_pos=cache_pos, image_embeds=image_embeds,
+                positions=positions)
+            if remat_blocks and n_pos > 1:
+                # nested remat: outer checkpoint saves only period carries;
+                # inner checkpoints bound the recompute's live set to one
+                # block (multi-layer periods: jamba/gemma/xlstm/vision)
+                block_fn = jax.checkpoint(block_fn)
+            h, nc, aux = block_fn(blocks[f"pos{pos}"], h, cache=cache)
+            aux_total = aux_total + aux
+            if nc is not None:
+                new_caches_p[f"pos{pos}"] = nc
+        return h, (new_caches_p or None, aux_total)
+
+    fn = period_fn
+    if remat_blocks:
+        fn = jax.checkpoint(period_fn,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+
+    xs = (params["blocks"], caches)
+    h, (new_caches, auxs) = jax.lax.scan(fn, h, xs)
+    return h, new_caches, jnp.sum(auxs)
+
+
+def forward(params, cfg, tokens=None, embeddings=None, image_embeds=None):
+    """Training/eval forward pass → (logits [B,S,V], moe_aux)."""
+    h = _embed(params, cfg, tokens, embeddings)
+    if image_embeds is not None:
+        image_embeds = image_embeds.astype(cfg.act_dtype)
+    h, _, aux = _scan_periods(params, cfg, h, mode="forward",
+                              image_embeds=image_embeds)
+    return _unembed(params, cfg, h), aux
+
+
+def lm_loss(params, cfg, batch, aux_weight: float = 0.01):
+    """Causal-LM or masked-prediction loss → (loss, metrics dict).
+
+    batch: {"tokens": [B,S]} (+ "embeddings", "image_embeds", "mask",
+    "targets" as the family requires).
+    """
+    logits, aux = forward(params, cfg, tokens=batch.get("tokens"),
+                          embeddings=batch.get("embeddings"),
+                          image_embeds=batch.get("image_embeds"))
+    logits = logits.astype(jnp.float32)
+    if cfg.encoder_only:
+        targets = batch["targets"]
+        mask = batch["mask"].astype(jnp.float32)
+    else:
+        targets = batch["tokens"][:, 1:]
+        logits = logits[:, :-1]
+        mask = jnp.ones(targets.shape, jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "moe_aux": aux,
+                   "perplexity_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+
+def prefill(params, cfg, tokens=None, embeddings=None, image_embeds=None):
+    """Forward pass that materialises every layer's cache → (logits, caches)."""
+    h = _embed(params, cfg, tokens, embeddings)
+    if image_embeds is not None:
+        image_embeds = image_embeds.astype(cfg.act_dtype)
+    if cfg.encoder_only:
+        h, _, _ = _scan_periods(params, cfg, h, mode="forward",
+                                image_embeds=image_embeds)
+        return _unembed(params, cfg, h), None
+    # caches=None in prefill mode → blocks create their caches
+    n_pos = len(cfg.period)
+
+    def period_fn(h, blocks):
+        new_caches_p = {}
+        for pos in range(n_pos):
+            h, nc, _ = _apply_block(blocks[f"pos{pos}"], h, cfg, pos,
+                                    mode="prefill", image_embeds=image_embeds)
+            if nc is not None:
+                new_caches_p[f"pos{pos}"] = nc
+        return h, new_caches_p
+
+    h, caches = jax.lax.scan(period_fn, h, params["blocks"])
+    return _unembed(params, cfg, h), caches
+
+
+def decode_step(params, cfg, token, caches, pos, image_embeds=None,
+                embeddings=None):
+    """One token: token [B,1] (or embeddings [B,1,D]) + caches → logits [B,V].
+
+    ``pos`` is a traced scalar: the write offset into the KV caches / the
+    RoPE position.  Cache leaves are [n_periods, ...] stacks threaded
+    through the period scan.
+    """
+    h = _embed(params, cfg, token, embeddings)
+    if image_embeds is not None:
+        image_embeds = image_embeds.astype(cfg.act_dtype)
+    pos = jnp.asarray(pos)
+    # scalar pos → shared position [1]; vector pos [B] → per-slot [B, 1]
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]
+    h, new_caches, _ = _scan_periods(params, cfg, h, mode="decode",
+                                     caches=caches, cache_pos=pos,
+                                     image_embeds=image_embeds,
+                                     positions=positions)
+    logits = _unembed(params, cfg, h)[:, 0]
+    return logits, new_caches

@@ -1,0 +1,1 @@
+from .serve_loop import Server, Request

@@ -1,0 +1,114 @@
+"""Batched serving: prefill + decode with slot-based continuous batching.
+
+``Server`` owns a fixed batch of ``n_slots`` sequences with one shared
+padded KV cache; finished slots are refilled from the request queue without
+stalling the others (continuous batching at slot granularity — the decode
+step shape never changes, so XLA compiles exactly two programs: prefill and
+decode).
+
+Sampling: greedy or temperature; per-slot EOS/len stop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer, model_zoo
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0   # 0 = greedy
+    rid: int = 0
+
+
+class Server:
+    def __init__(self, params, cfg, *, n_slots: int = 4, max_seq: int = 512,
+                 eos_id: int | None = None, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.rng = np.random.default_rng(seed)
+
+        self._decode = jax.jit(
+            lambda p, tok, caches, pos: transformer.decode_step(
+                p, cfg, tok, caches, pos))
+        self._prefill = jax.jit(
+            lambda p, tok: transformer.prefill(p, cfg, tokens=tok))
+        self.caches = model_zoo.init_cache(cfg, n_slots, max_seq)
+
+    # -- single-sequence prefill into a slot (recompute-simple; a production
+    #    server would batch prefills — noted in DESIGN.md) --
+    def _fill_slot(self, slot: int, prompt: list[int]):
+        toks = jnp.asarray(prompt, jnp.int32)[None, :]
+        logits, caches = self._prefill(self.params, toks)
+        # splice this sequence's prefill caches into the batch cache at slot
+        def splice(batch_leaf, one_leaf):
+            if batch_leaf.ndim >= 3 and one_leaf.shape[1] == 1:
+                # [P, B, S, ...] ← [P, 1, s, ...] at (slot, 0)
+                start = (0, slot) + (0,) * (batch_leaf.ndim - 2)
+                return jax.lax.dynamic_update_slice(
+                    batch_leaf, one_leaf.astype(batch_leaf.dtype), start)
+            return batch_leaf
+        self.caches = jax.tree.map(splice, self.caches, caches)
+        last = logits[:, -1]
+        return last[0]
+
+    def _sample(self, logits, temperature: float):
+        if temperature <= 0:
+            return int(jnp.argmax(logits))
+        probs = np.asarray(jax.nn.softmax(logits.astype(jnp.float32)
+                                          / temperature), np.float64)
+        probs = probs / probs.sum()
+        return int(self.rng.choice(probs.shape[0], p=probs))
+
+    def generate(self, requests: list[Request]) -> dict[int, list[int]]:
+        """Run all requests to completion; returns {rid: generated tokens}."""
+        queue = list(requests)
+        slots: list[dict | None] = [None] * self.n_slots
+        done: dict[int, list[int]] = {}
+
+        def admit():
+            for i in range(self.n_slots):
+                if slots[i] is None and queue:
+                    req = queue.pop(0)
+                    last_logits = self._fill_slot(i, req.prompt)
+                    tok = self._sample(last_logits, req.temperature)
+                    slots[i] = {"req": req, "pos": len(req.prompt),
+                                "out": [tok], "next": tok}
+
+        admit()
+        step_tokens = np.zeros((self.n_slots, 1), np.int32)
+        step_pos = np.zeros((self.n_slots,), np.int32)
+        while any(s is not None for s in slots):
+            # per-slot positions: every active slot decodes at its own offset
+            # (vector-pos decode path); idle slots write harmlessly at 0 and
+            # are overwritten by the next prefill splice.
+            active = [i for i, s in enumerate(slots) if s is not None]
+            for i in range(self.n_slots):
+                step_tokens[i, 0] = slots[i]["next"] if slots[i] else 0
+                step_pos[i] = slots[i]["pos"] if slots[i] else 0
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(step_tokens), self.caches,
+                jnp.asarray(step_pos))
+            for i in active:
+                s = slots[i]
+                tok = self._sample(logits[i], s["req"].temperature)
+                s["out"].append(tok)
+                s["next"] = tok
+                s["pos"] += 1
+                hit_eos = self.eos_id is not None and tok == self.eos_id
+                if (len(s["out"]) >= s["req"].max_new_tokens or hit_eos
+                        or s["pos"] >= self.max_seq - 1):
+                    done[s["req"].rid] = s["out"]
+                    slots[i] = None
+            admit()
+        return done

@@ -1,0 +1,3 @@
+from . import optimizer, checkpoint, straggler
+from .train_loop import Trainer, TrainConfig, TrainState, make_train_step, init_state
+from .optimizer import OptimizerConfig

@@ -1,0 +1,172 @@
+"""Training loop: jit'd step factory + fault-tolerant host driver.
+
+``make_train_step`` builds the donated, sharded step:
+    state, metrics = step(state, batch)
+with loss/grad in f32 master weights, optional int8 gradient compression
+(error feedback carried in the state), AdamW, and the paper's long-tail
+controller consuming the loss stream host-side (EarlyStopHook — EMA'd
+Eq. 7 on the training objective, DESIGN.md §2 beyond-paper use).
+
+``Trainer`` is the host loop: checkpoint-every-N with atomic commit +
+restart-from-LATEST, straggler monitor, and failure injection for the
+fault-tolerance tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution import compression
+from repro.models import transformer
+from . import checkpoint as ckpt_lib
+from . import optimizer as opt_lib
+from .straggler import StragglerMonitor
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt_lib.OptState
+    ef: Any            # error-feedback buffers (None when compression off)
+    rng: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: opt_lib.OptimizerConfig = opt_lib.OptimizerConfig()
+    compress_grads: bool = False    # int8 + error feedback
+    aux_weight: float = 0.01
+    microbatches: int = 1           # grad accumulation (activation-memory knob)
+
+
+def init_state(key, cfg, train_cfg: TrainConfig) -> TrainState:
+    params = transformer.init_lm(key, cfg)
+    return TrainState(
+        params=params,
+        opt=opt_lib.init(params),
+        ef=(compression.init_error_feedback(params)
+            if train_cfg.compress_grads else None),
+        rng=key,
+    )
+
+
+def make_train_step(cfg, train_cfg: TrainConfig) -> Callable:
+    """Returns step(state, batch) → (state, metrics); jit it at the call
+    site with the mesh-appropriate shardings (launch/train.py) or plainly
+    on one device (examples/tests)."""
+
+    def loss_fn(params, batch):
+        return transformer.lm_loss(params, cfg, batch,
+                                   aux_weight=train_cfg.aux_weight)
+
+    def grads_of(params, batch):
+        m = train_cfg.microbatches
+        if m <= 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        # gradient accumulation: scan over microbatches — peak activation
+        # memory is one microbatch's remat footprint + the f32 grad buffer
+        micro = jax.tree.map(
+            lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch)
+
+        def acc_step(carry, mb):
+            g_acc, loss_acc, aux_acc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / m, g_acc, g)
+            return (g_acc, loss_acc + loss / m,
+                    aux_acc + metrics["moe_aux"] / m), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss, aux), _ = jax.lax.scan(
+            acc_step, (zeros, jnp.zeros(()), jnp.zeros(())), micro)
+        metrics = {"loss": loss, "moe_aux": aux,
+                   "perplexity_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+        return (loss, metrics), grads
+
+    def step(state: TrainState, batch):
+        (loss, metrics), grads = grads_of(state.params, batch)
+        ef = state.ef
+        if train_cfg.compress_grads:
+            # Single-program form: numerically identical quant/dequant with
+            # error feedback; the int8 *wire* path is the shard_map ring in
+            # distribution/compression.py (exercised in tests/dryrun).
+            grads, ef = compression.compress_with_feedback(
+                grads, ef, lambda g: compression.fake_quantize_grads(g))
+        new_params, new_opt, opt_metrics = opt_lib.apply_updates(
+            state.params, grads, state.opt, train_cfg.opt)
+        metrics = dict(metrics, **opt_metrics, total_loss=loss)
+        return TrainState(new_params, new_opt, ef, state.rng), metrics
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# Host driver
+# --------------------------------------------------------------------------
+
+class Trainer:
+    """Fault-tolerant host loop.
+
+    · checkpoints every ``ckpt_every`` steps (atomic, keep-last-N) and
+      auto-resumes from LATEST on construction;
+    · optional ``EarlyStopHook`` (the paper's controller) halts on the
+      loss-change-rate threshold;
+    · ``fail_at`` injects a crash (tests restart-recovery);
+    · per-step wall time feeds the straggler monitor.
+    """
+
+    def __init__(self, cfg, train_cfg: TrainConfig, data_iter, *,
+                 ckpt_dir: str | None = None, ckpt_every: int = 50,
+                 keep: int = 3, earlystop=None, seed: int = 0,
+                 jit_step: bool = True, fail_at: int | None = None):
+        self.cfg = cfg
+        self.train_cfg = train_cfg
+        self.data_iter = data_iter
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.keep = keep
+        self.earlystop = earlystop
+        self.fail_at = fail_at
+        self.monitor = StragglerMonitor()
+        self.metrics_log: list[dict] = []
+
+        step_fn = make_train_step(cfg, train_cfg)
+        self._step_fn = jax.jit(step_fn, donate_argnums=0) if jit_step else step_fn
+
+        key = jax.random.PRNGKey(seed)
+        self.state = init_state(key, cfg, train_cfg)
+        self.step = 0
+        if ckpt_dir is not None and ckpt_lib.latest_step(ckpt_dir) is not None:
+            self.state, self.step = ckpt_lib.restore(ckpt_dir, self.state)
+            self.step = int(self.step)
+
+    def run(self, num_steps: int) -> dict:
+        stopped_early = False
+        while self.step < num_steps:
+            batch = next(self.data_iter)
+            self.monitor.start()
+            if self.fail_at is not None and self.step == self.fail_at:
+                raise RuntimeError(f"injected failure at step {self.step}")
+            self.state, metrics = self._step_fn(self.state, batch)
+            loss = float(metrics["loss"])
+            self.monitor.stop()
+            self.step += 1
+            self.metrics_log.append({"step": self.step, "loss": loss})
+            if self.ckpt_dir and self.step % self.ckpt_every == 0:
+                ckpt_lib.save(self.ckpt_dir, self.state, self.step,
+                              keep=self.keep)
+            if self.earlystop is not None and self.earlystop.update(loss):
+                stopped_early = True
+                break
+        if self.ckpt_dir:
+            ckpt_lib.save(self.ckpt_dir, self.state, self.step, keep=self.keep)
+        return {
+            "final_step": self.step,
+            "stopped_early": stopped_early,
+            "final_loss": self.metrics_log[-1]["loss"] if self.metrics_log else None,
+            "straggler": self.monitor.report(),
+        }

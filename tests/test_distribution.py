@@ -1,0 +1,126 @@
+"""Sharding rules + int8 ring all-reduce (multi-device via subprocess)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, SHAPES
+from repro.models import transformer, model_zoo
+
+
+def _mesh_proxy():
+    """A (data=16, model=16)-shaped Mesh stand-in built from 1 real device
+    is impossible — instead validate specs against axis-size maps."""
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+        class devices:
+            size = 256
+    return M()
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_specs_divisible_and_structured(arch):
+    from repro.distribution.sharding import param_spec
+    cfg = get_config(arch)
+    struct = jax.eval_shape(lambda k: transformer.init_lm(k, cfg),
+                            jax.random.PRNGKey(0))
+    mesh = _mesh_proxy()
+    n_sharded = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(struct)[0]:
+        spec = param_spec(path, leaf, mesh)
+        assert len(spec) == leaf.ndim, (path, spec, leaf.shape)
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                continue
+            size = (np.prod([mesh.shape[a] for a in ax])
+                    if isinstance(ax, tuple) else mesh.shape[ax])
+            assert dim % size == 0, (path, leaf.shape, spec)
+            n_sharded += 1
+    assert n_sharded > 0, f"{arch}: no parameter got sharded"
+
+
+@pytest.mark.parametrize("arch", ["llama4-scout-17b-a16e", "jamba-v0.1-52b",
+                                  "mistral-nemo-12b"])
+def test_large_params_are_2d_sharded(arch):
+    """Every ≥50M-param leaf must shard on ≥1 axis (memory budget, DESIGN §4)."""
+    from repro.distribution.sharding import param_spec
+    cfg = get_config(arch)
+    struct = jax.eval_shape(lambda k: transformer.init_lm(k, cfg),
+                            jax.random.PRNGKey(0))
+    mesh = _mesh_proxy()
+    for path, leaf in jax.tree_util.tree_flatten_with_path(struct)[0]:
+        n = int(np.prod(leaf.shape))
+        if n < 50e6:
+            continue
+        spec = param_spec(path, leaf, mesh)
+        assert any(ax is not None for ax in spec), (path, leaf.shape)
+
+
+def test_cache_specs_cover_long_context():
+    from repro.distribution.sharding import input_shardings
+    cfg = get_config("jamba-v0.1-52b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    specs = model_zoo.input_specs(cfg, SHAPES["long_500k"])
+    sh = input_shardings(specs, mesh, 1)
+    assert jax.tree.structure(sh, is_leaf=lambda x: hasattr(x, "spec")) \
+        == jax.tree.structure(specs, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+_RING_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np, functools
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+    from repro.distribution.compression import ring_allreduce_int8
+
+    mesh = jax.make_mesh((8,), ("d",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (8, 1000))
+                    .astype(np.float32))
+    f = shard_map(functools.partial(ring_allreduce_int8, axis_name="d",
+                                    axis_size=8),
+                  mesh=mesh, in_specs=P("d"), out_specs=P("d"),
+                  check_vma=False)
+    out = f(x)
+    ref = jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    # int8 ring: ≤ 1 rounding per hop, 7 hops on the reduce path
+    assert err < scale * 8, (err, scale)
+    # wire ops are int8: check the HLO
+    hlo = jax.jit(f).lower(x).compile().as_text()
+    assert "collective-permute" in hlo
+    import re
+    perms = re.findall(r"(s8|s32|f32)\\[[^\\]]*\\][^=]*collective-permute",
+                       hlo) or re.findall(
+                       r"= \\(?(s8|s32|f32)\\[[^\\]]*\\].*collective-permute",
+                       hlo)
+    assert "s8" in perms, perms
+    print("RING_OK", err)
+""")
+
+
+def test_ring_allreduce_int8_subprocess():
+    """Numerics + int8 wire format, on 8 host devices (fresh process so the
+    main test session keeps its single-device view)."""
+    r = subprocess.run([sys.executable, "-c", _RING_SCRIPT],
+                       capture_output=True, text=True, timeout=300,
+                       env={**__import__("os").environ,
+                            "PYTHONPATH": "src"}, cwd="/root/repo")
+    assert "RING_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_activation_rules_cover_known_names():
+    from repro.distribution.sharding import activation_rules
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = activation_rules(mesh)
+    for name in ("act_btd", "act_bshd", "act_btf", "logits_btv",
+                 "moe_ecd", "moe_ecf"):
+        assert name in rules.table

@@ -1,0 +1,95 @@
+"""The trip-count-aware HLO analyzer — the roofline's foundation."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.launch.hlo_cost import (analyze, parse_computations, _parse_op_line,
+                                   _type_numel_bytes)
+
+
+def test_parse_op_line_simple():
+    op = _parse_op_line("  %dot.5 = f32[64,128]{1,0} dot(%a, %b), "
+                        "lhs_contracting_dims={1}, rhs_contracting_dims={0}")
+    assert op.name == "dot.5" and op.opcode == "dot"
+    assert _type_numel_bytes(op.rtype) == (64 * 128, 64 * 128 * 4)
+
+
+def test_parse_op_line_tuple_with_comments():
+    line = ("  %while.424 = (s32[], f32[2,1,2,512]{3,2,1,0}, "
+            "/*index=5*/f32[4,2,1024,1,64]{4,3,2,1,0}) while(%tuple.367), "
+            "condition=%c, body=%b")
+    op = _parse_op_line(line)
+    assert op.opcode == "while"
+    n, b = _type_numel_bytes(op.rtype)
+    assert n == 1 + 2 * 2 * 512 + 4 * 2 * 1024 * 64
+
+
+def test_parse_op_line_root_and_noise():
+    assert _parse_op_line("ROOT %t = (f32[2]) tuple(%x)").opcode == "tuple"
+    assert _parse_op_line("}") is None
+    assert _parse_op_line("// comment") is None
+
+
+_GEN = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def f(w, x):
+        def step(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(step, x, None, length=12)
+        return jnp.sum(h)
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    ws = NamedSharding(mesh, P(None, "model"))
+    xs = NamedSharding(mesh, P("data", None))
+    with mesh:
+        c = jax.jit(f, in_shardings=(ws, xs)).lower(
+            jax.ShapeDtypeStruct((256, 256), jnp.float32),
+            jax.ShapeDtypeStruct((128, 256), jnp.float32)).compile()
+    print("BEGIN_HLO")
+    print(c.as_text())
+""")
+
+
+@pytest.fixture(scope="module")
+def scan_hlo():
+    r = subprocess.run([sys.executable, "-c", _GEN], capture_output=True,
+                       text=True, timeout=300, cwd="/root/repo",
+                       env={**__import__("os").environ, "PYTHONPATH": "src"})
+    assert "BEGIN_HLO" in r.stdout, r.stderr
+    return r.stdout.split("BEGIN_HLO")[1]
+
+
+def test_trip_count_multiplication_exact(scan_hlo):
+    c = analyze(scan_hlo)
+    # 12 iterations × 2·(128/4)·256·256 flops per device (model-sharded dot)
+    exact = 12 * 2 * (128 // 4) * 256 * (256 // 2)
+    assert c.flops == pytest.approx(exact, rel=1e-6)
+    assert c.dynamic_loops == 0
+
+
+def test_collectives_scaled_by_trips(scan_hlo):
+    c = analyze(scan_hlo)
+    # per-iteration all-gather of [32,256] f32 → ×12
+    assert c.coll.get("all-gather", 0) == pytest.approx(12 * 32 * 256 * 4,
+                                                        rel=1e-6)
+
+
+def test_bytes_nonzero_and_bounded(scan_hlo):
+    c = analyze(scan_hlo)
+    assert c.bytes > 0
+    # loose sanity: not more than 100× the dot operand traffic
+    assert c.bytes < 100 * 12 * (32 * 256 + 256 * 128 + 32 * 128) * 4
+
+
+def test_computation_parser_finds_loop_bodies(scan_hlo):
+    comps = parse_computations(scan_hlo)
+    assert len(comps) > 3
+    assert any(any(o.opcode == "while" for o in ops)
+               for ops in comps.values())

@@ -1,0 +1,117 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
+mode on CPU; same code targets TPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.kmeans_assign import kmeans_assign
+from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+from repro.kernels.gmm_estep import gmm_estep
+from repro.kernels.gmm_estep.ref import gmm_estep_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n,d,k", [
+    (64, 2, 2), (1000, 4, 8), (1024, 3, 6), (777, 11, 10), (128, 130, 3),
+    (2048, 4, 16), (31, 7, 5),
+])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_kmeans_assign_sweep(n, d, k, dtype):
+    x = jnp.asarray(RNG.normal(0, 10, (n, d)).astype(dtype))
+    c = jnp.asarray(RNG.normal(0, 10, (k, d)).astype(dtype))
+    l1, s1, n1, j1 = kmeans_assign(x, c)
+    l2, s2, n2, j2 = kmeans_assign_ref(x, c)
+    assert (l1 == l2).all()
+    np.testing.assert_allclose(s1, s2, rtol=2e-5, atol=1e-2)
+    np.testing.assert_allclose(n1, n2, rtol=0)
+    np.testing.assert_allclose(j1, j2[0], rtol=2e-5)
+
+
+@given(n=st.integers(8, 300), d=st.integers(1, 24), k=st.integers(2, 12))
+@settings(max_examples=12, deadline=None)
+def test_kmeans_assign_property(n, d, k):
+    rng = np.random.default_rng(n * 31 + d * 7 + k)
+    x = jnp.asarray(rng.normal(0, 5, (n, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(0, 5, (k, d)).astype(np.float32))
+    labels, sums, counts, j = kmeans_assign(x, c)
+    # invariants: counts sum to n; sums consistent with labels; J ≥ 0
+    assert float(jnp.sum(counts)) == n
+    assert float(j) >= 0
+    ref_sums = np.zeros((k, d), np.float32)
+    np.add.at(ref_sums, np.asarray(labels), np.asarray(x))
+    np.testing.assert_allclose(sums, ref_sums, rtol=2e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("n,d,k", [(64, 2, 2), (1000, 4, 8), (777, 11, 10),
+                                   (2048, 3, 6)])
+def test_gmm_estep_sweep(n, d, k):
+    x = jnp.asarray(RNG.normal(0, 3, (n, d)).astype(np.float32))
+    mu = jnp.asarray(RNG.normal(0, 3, (k, d)).astype(np.float32))
+    var = jnp.asarray(RNG.uniform(0.5, 4, (k, d)).astype(np.float32))
+    lw = jnp.log(jnp.full((k,), 1.0 / k, jnp.float32))
+    o1 = gmm_estep(x, mu, var, lw)
+    o2 = gmm_estep_ref(x, mu, var, lw)
+    assert (o1[0] == o2[0]).all()
+    np.testing.assert_allclose(o1[1], o2[1][0], rtol=1e-5)
+    np.testing.assert_allclose(o1[2], o2[2], rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(o1[3], o2[3], rtol=2e-4, atol=2e-2)
+    np.testing.assert_allclose(o1[4], o2[4], rtol=2e-4, atol=2e-1)
+
+
+def test_gmm_estep_responsibilities_sum():
+    n, d, k = 500, 4, 6
+    x = jnp.asarray(RNG.normal(0, 2, (n, d)).astype(np.float32))
+    mu = jnp.asarray(RNG.normal(0, 2, (k, d)).astype(np.float32))
+    var = jnp.ones((k, d), jnp.float32)
+    lw = jnp.log(jnp.full((k,), 1.0 / k))
+    _, _, r_sum, _, _ = gmm_estep(x, mu, var, lw)
+    assert float(jnp.sum(r_sum)) == pytest.approx(n, rel=1e-4)
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,dh,causal,win,dtype", [
+    (2, 4, 2, 256, 64, True, None, jnp.float32),
+    (1, 8, 8, 128, 64, False, None, jnp.float32),
+    (2, 4, 1, 200, 80, True, None, jnp.float32),
+    (1, 4, 2, 256, 64, True, 64, jnp.float32),
+    (1, 2, 2, 96, 128, True, None, jnp.float32),
+    (1, 4, 2, 128, 64, True, None, jnp.bfloat16),
+])
+def test_flash_attention_sweep(b, hq, hkv, s, dh, causal, win, dtype):
+    q = jnp.asarray(RNG.normal(0, 1, (b, hq, s, dh)), dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (b, hkv, s, dh)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (b, hkv, s, dh)), dtype)
+    o1 = flash_attention(q, k, v, causal=causal, window=win)
+    o2 = attention_ref(q, k, v, causal=causal, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(o1.astype(jnp.float32)
+                                 - o2.astype(jnp.float32)))) < tol
+
+
+@given(s=st.integers(16, 200), dh=st.sampled_from([32, 64]),
+       win=st.one_of(st.none(), st.integers(8, 64)))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_property(s, dh, win):
+    rng = np.random.default_rng(s * 13 + dh)
+    q = jnp.asarray(rng.normal(0, 1, (1, 4, s, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, s, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, s, dh)).astype(np.float32))
+    o1 = flash_attention(q, k, v, causal=True, window=win)
+    o2 = attention_ref(q, k, v, causal=True, window=win)
+    assert float(jnp.max(jnp.abs(o1 - o2))) < 2e-5
+
+
+def test_chunked_jnp_attention_matches_exact():
+    from repro.models.layers import _sdpa, _sdpa_chunked
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(0, 1, (2, 300, 4, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (2, 300, 2, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (2, 300, 2, 32)).astype(np.float32))
+    for causal, win in [(True, None), (False, None), (True, 64)]:
+        o1 = _sdpa_chunked(q, k, v, causal=causal, window=win,
+                           block_q=64, block_k=128)
+        o2 = _sdpa(q, k, v, causal=causal, window=win)
+        assert float(jnp.max(jnp.abs(o1 - o2))) < 3e-5

@@ -1,0 +1,103 @@
+"""§Perf optimizations are EXACT rewrites — each must match its baseline.
+
+1. chunkwise-parallel mLSTM  == sequential stabilised cell
+2. grouped MoE dispatch      == global sort/scatter dispatch (no-drop regime)
+3. ring-buffer window caches == full-length caches (gemma decode, wraparound)
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ssm, init_lm, prefill, decode_step, init_cache
+from repro.models.transformer import forward
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("chunk,s", [(8, 64), (16, 64), (32, 96), (64, 64)])
+def test_chunked_mlstm_matches_sequential(chunk, s):
+    cfg = get_config("xlstm-350m", reduced=True)
+    p = ssm.init_mlstm(KEY, cfg)
+    rng = np.random.default_rng(chunk * 100 + s)
+    x = jnp.asarray(rng.normal(0, 0.5, (2, s, cfg.d_model)).astype(np.float32))
+    o_ref, st_ref = ssm.mlstm(p, x, cfg, state=None)
+    cfg_c = dataclasses.replace(cfg, xlstm_chunk=chunk)
+    o_chk, st_chk = ssm.mlstm(p, x, cfg_c, state=None)
+    assert float(jnp.max(jnp.abs(o_ref - o_chk))) < 1e-5
+    for a, b in zip(st_ref, st_chk):
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-5
+
+
+def test_chunked_mlstm_carries_state_across_chunks():
+    """Chunked with an incoming state == sequential continuation."""
+    cfg = get_config("xlstm-350m", reduced=True)
+    p = ssm.init_mlstm(KEY, cfg)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(0, 0.5, (1, 48, cfg.d_model)).astype(np.float32))
+    _, st = ssm.mlstm(p, x[:, :16], cfg, state=None)
+    o_ref, _ = ssm.mlstm(p, x[:, 16:], cfg, state=st)
+    cfg_c = dataclasses.replace(cfg, xlstm_chunk=16)
+    o_chk, _ = ssm.mlstm(p, x[:, 16:], cfg_c, state=st)
+    assert float(jnp.max(jnp.abs(o_ref - o_chk))) < 1e-5
+
+
+@pytest.mark.parametrize("groups", [2, 4])
+def test_grouped_moe_matches_global(groups):
+    cfg = get_config("qwen3-moe-30b-a3b", reduced=True)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    cfg_g = dataclasses.replace(cfg, moe_dispatch_groups=groups)
+    params = init_lm(KEY, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
+    l1, a1 = forward(params, cfg, tokens=toks)
+    l2, a2 = forward(params, cfg_g, tokens=toks)
+    assert float(jnp.max(jnp.abs(l1.astype(jnp.float32)
+                                 - l2.astype(jnp.float32)))) < 1e-2
+    assert float(a1) == pytest.approx(float(a2), rel=1e-5)
+
+
+def test_ring_cache_decode_exact_with_wraparound():
+    """window << seq: first decode after prefill must match full forward."""
+    cfg = get_config("gemma3-12b", reduced=True)
+    cfg = dataclasses.replace(cfg, sliding_window=8)      # ring wraps: 8 << 24
+    params = init_lm(KEY, cfg)
+    b, s = 2, 24
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    logits_full, _ = forward(params, cfg, tokens=tokens)
+    _, caches = prefill(params, cfg, tokens=tokens[:, :s - 1])
+    full = init_cache(cfg, b, s)
+    caches = jax.tree.map(
+        lambda d, src: jax.lax.dynamic_update_slice(
+            d, src.astype(d.dtype), (0,) * src.ndim)
+        if d.shape != src.shape else src.astype(d.dtype), full, caches)
+    ld, _ = decode_step(params, cfg, tokens[:, s - 1:s], caches, s - 1)
+    err = float(jnp.max(jnp.abs(logits_full[:, -1].astype(jnp.float32)
+                                - ld.astype(jnp.float32))))
+    assert err < 1e-2, err
+    # the local caches really are window-sized
+    k0 = caches["pos0"]["k"]
+    assert k0.shape[2] == 8
+
+
+def test_ring_cache_matches_full_cache_path():
+    """windowed_local_cache=False (baseline) and True agree on decode."""
+    cfg_r = get_config("gemma3-12b", reduced=True)
+    cfg_f = dataclasses.replace(cfg_r, windowed_local_cache=False)
+    params = init_lm(KEY, cfg_r)
+    b, s = 1, 20
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg_r.vocab)
+    outs = []
+    for cfg in (cfg_r, cfg_f):
+        _, caches = prefill(params, cfg, tokens=tokens[:, :s - 1])
+        full = init_cache(cfg, b, s)
+        caches = jax.tree.map(
+            lambda d, src: jax.lax.dynamic_update_slice(
+                d, src.astype(d.dtype), (0,) * src.ndim)
+            if d.shape != src.shape else src.astype(d.dtype), full, caches)
+        ld, _ = decode_step(params, cfg, tokens[:, s - 1:s], caches, s - 1)
+        outs.append(ld.astype(jnp.float32))
+    assert float(jnp.max(jnp.abs(outs[0] - outs[1]))) < 1e-2

@@ -1,0 +1,79 @@
+"""Rand index: contingency identity vs the paper's O(n²) pair formulation +
+property-based invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rand_index, adjusted_rand_index, contingency_table
+from repro.core.rand_index import rand_index_pairwise_reference
+
+
+labels = st.integers(0, 5)
+
+
+@given(st.lists(st.tuples(labels, labels), min_size=2, max_size=120))
+@settings(max_examples=60, deadline=None)
+def test_matches_pairwise_oracle(pairs):
+    a = np.array([p[0] for p in pairs])
+    b = np.array([p[1] for p in pairs])
+    fast = float(rand_index(jnp.asarray(a), jnp.asarray(b), 6, 6))
+    slow = rand_index_pairwise_reference(a, b)
+    assert fast == pytest.approx(slow, abs=1e-5)
+
+
+@given(st.lists(labels, min_size=2, max_size=80))
+@settings(max_examples=40, deadline=None)
+def test_identical_partitions_are_one(xs):
+    a = jnp.asarray(np.array(xs))
+    assert float(rand_index(a, a, 6, 6)) == pytest.approx(1.0)
+
+
+@given(st.lists(st.tuples(labels, labels), min_size=2, max_size=80),
+       st.permutations(list(range(6))))
+@settings(max_examples=40, deadline=None)
+def test_label_permutation_invariance(pairs, perm):
+    """Rand depends on the partition, not the label names."""
+    a = np.array([p[0] for p in pairs])
+    b = np.array([p[1] for p in pairs])
+    b_renamed = np.array(perm)[b]
+    r1 = float(rand_index(jnp.asarray(a), jnp.asarray(b), 6, 6))
+    r2 = float(rand_index(jnp.asarray(a), jnp.asarray(b_renamed), 6, 6))
+    assert r1 == pytest.approx(r2, abs=1e-6)
+
+
+@given(st.lists(st.tuples(labels, labels), min_size=2, max_size=80))
+@settings(max_examples=40, deadline=None)
+def test_range_and_symmetry(pairs):
+    a = np.array([p[0] for p in pairs])
+    b = np.array([p[1] for p in pairs])
+    r_ab = float(rand_index(jnp.asarray(a), jnp.asarray(b), 6, 6))
+    r_ba = float(rand_index(jnp.asarray(b), jnp.asarray(a), 6, 6))
+    assert 0.0 <= r_ab <= 1.0 + 1e-6
+    assert r_ab == pytest.approx(r_ba, abs=1e-6)
+
+
+def test_paper_worked_example():
+    """Fig. 1: Rand(P1, P2) = (5 + 22) / 36 = 75%."""
+    p1 = np.array([0, 0, 0, 0, 1, 1, 1, 2, 2])     # a1..a9 in P1
+    p2 = np.array([0, 0, 0, 1, 1, 1, 2, 2, 2])     # a1..a9 in P2
+    r = float(rand_index(jnp.asarray(p1), jnp.asarray(p2), 3, 3))
+    assert r == pytest.approx(27.0 / 36.0)
+
+
+def test_contingency_totals():
+    a = np.array([0, 0, 1, 2, 1])
+    b = np.array([1, 1, 0, 0, 1])
+    t = np.asarray(contingency_table(jnp.asarray(a), jnp.asarray(b), 3, 2))
+    assert t.sum() == 5
+    assert t[0, 1] == 2 and t[1, 0] == 1 and t[1, 1] == 1 and t[2, 0] == 1
+
+
+def test_ari_chance_corrected():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 4, 2000)
+    b = rng.integers(0, 4, 2000)
+    ari = float(adjusted_rand_index(jnp.asarray(a), jnp.asarray(b), 4, 4))
+    assert abs(ari) < 0.05          # independent labelings → ≈ 0
+    assert float(adjusted_rand_index(jnp.asarray(a), jnp.asarray(a), 4, 4)) \
+        == pytest.approx(1.0)

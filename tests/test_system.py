@@ -1,0 +1,152 @@
+"""End-to-end behaviour of the paper's system: sample → fit regression →
+early stop → accuracy/cost validation; plus the LM-loop generalisation and
+the distributed clustering path (subprocess, 8 devices)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import em_gmm
+from repro.data import load, spacenet_pixels
+from repro.launch.cluster import train_regression, run_production
+
+
+@pytest.mark.parametrize("algorithm", ["kmeans", "em"])
+def test_paper_pipeline_end_to_end(algorithm):
+    """§4 pipeline on the skin-like dataset, k=2 (paper's Skin_Seg setup)."""
+    k = 2
+    data = load("skin", n=24_000, seed=0)
+    groups = core.random_groups(data, 6000, max_groups=4)
+    model, t_train = train_regression(groups[:3], k, algorithm,
+                                      max_iters=150, family="quadratic")
+    assert model.regression.metrics.r2 > 0.5
+    h_star = model.threshold_for(0.99)
+    assert h_star > 0
+
+    val = groups[3]
+    labels, _, iters, t_act = run_production(val, k, algorithm, h_star,
+                                             max_iters=150, seed=9)
+    labels_f, _, iters_f, t_full = run_production(
+        val, k, algorithm, 0.0 if algorithm == "kmeans" else 1e-12,
+        max_iters=400, seed=9)
+    acc = float(core.rand_index(labels, labels_f, k, k))
+    assert int(iters) <= int(iters_f)
+    assert acc >= 0.95, f"{algorithm}: achieved {acc} for desired 0.99"
+
+
+def test_spacenet_image_groups():
+    """SpaceNet-style flow: image = sampling group (§5.2), k=6."""
+    pix = spacenet_pixels(n_images=3, k_true=6, seed=0,
+                          shape=(64, 64, 3))      # reduced resolution
+    model, _ = train_regression(pix[:2], 6, "kmeans", max_iters=120,
+                                family="quadratic")
+    h_star = model.threshold_for(0.99)
+    labels, _, iters, _ = run_production(pix[2], 6, "kmeans", h_star,
+                                         max_iters=200)
+    labels_f, _, iters_f, _ = run_production(pix[2], 6, "kmeans", 0.0,
+                                             max_iters=400)
+    acc = float(core.rand_index(labels, labels_f, 6, 6))
+    assert acc > 0.9
+
+
+def test_lm_longtail_generalisation():
+    """Beyond-paper: the controller stops LM training near a target fraction
+    of final quality (pilot run fits the regression, main run early-stops)."""
+    from repro.configs import get_config
+    from repro.training import Trainer, TrainConfig, OptimizerConfig
+
+    cfg = get_config("qwen3-8b", reduced=True)
+    tc = TrainConfig(opt=OptimizerConfig(peak_lr=5e-3, warmup_steps=5,
+                                         total_steps=120))
+
+    def data():
+        rng = np.random.default_rng(7)
+        while True:
+            start = rng.integers(0, cfg.vocab, size=(4, 1))
+            yield {"tokens": jnp.asarray((start + np.arange(32)) % cfg.vocab,
+                                         jnp.int32)}
+
+    # pilot: run to (near-)convergence, harvest (r, h) from the loss curve
+    pilot = Trainer(cfg, tc, data(), seed=1)
+    pilot.run(100)
+    losses = np.array([m["loss"] for m in pilot.metrics_log])
+    final, first = losses[-5:].mean(), losses[:3].mean()
+    # quality proxy r_i = relative progress toward final loss
+    sm = np.convolve(losses, np.ones(5) / 5, mode="valid")
+    r = np.clip((first - sm) / max(first - final, 1e-9), 0, 1)
+    h = np.abs(np.diff(sm)) / np.maximum(np.abs(sm[:-1]), 1e-9)
+    model = core.fit_longtail([(r[1:], h)], algorithm="lm_train",
+                              dataset="markov", family="quadratic")
+    hook = core.EarlyStopHook(model, desired_accuracy=0.95, ema=0.8,
+                              patience=5, min_steps=20)
+    main = Trainer(cfg, tc, data(), earlystop=hook, seed=1)
+    rep = main.run(100)
+    if rep["stopped_early"]:
+        assert rep["final_step"] < 100
+        stopped_loss = main.metrics_log[-1]["loss"]
+        # must have realised most of the achievable improvement
+        progress = (first - stopped_loss) / max(first - final, 1e-9)
+        assert progress > 0.6, progress
+
+
+_DIST = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import core
+    from repro.data import load
+    from repro.launch.cluster import run_production
+
+    data = load("skin", n=16000, seed=3)
+    # sharded early-stopped run vs single-device run: identical stop point
+    l1, j1, i1, _ = run_production(data, 2, "kmeans", 1e-4, max_iters=100,
+                                   seed=5, shard=True)
+    l2, j2, i2, _ = run_production(np.asarray(data)[:l1.shape[0]], 2,
+                                   "kmeans", 1e-4, max_iters=100, seed=5,
+                                   shard=False)
+    acc = float(core.rand_index(l1, l2, 2, 2))
+    assert i1 == i2, (i1, i2)
+    assert acc > 0.9999, acc
+    print("DIST_OK", i1, acc)
+""")
+
+
+def test_distributed_clustering_matches_single_device():
+    r = subprocess.run([sys.executable, "-c", _DIST], capture_output=True,
+                       text=True, timeout=600, cwd="/root/repo",
+                       env={**__import__("os").environ, "PYTHONPATH": "src"})
+    assert "DIST_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]
+
+
+def test_cluster_cli_smoke(tmp_path):
+    out = tmp_path / "rep.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.cluster", "--dataset", "skin",
+         "--k", "2", "--n", "12000", "--group-size", "3000",
+         "--train-groups", "2", "--desired-accuracy", "0.99",
+         "--out", str(out)],
+        capture_output=True, text=True, timeout=600, cwd="/root/repo",
+        env={**__import__("os").environ, "PYTHONPATH": "src"})
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rep = json.loads(out.read_text())
+    assert rep["achieved_accuracy"] > 0.9
+    assert rep["iters_earlystop"] <= rep["iters_full"]
+
+
+def test_train_cli_smoke(tmp_path):
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-8b",
+         "--steps", "8", "--batch", "2", "--seq", "32",
+         "--ckpt-dir", str(tmp_path / "ck"),
+         "--out", str(tmp_path / "train.json")],
+        capture_output=True, text=True, timeout=600, cwd="/root/repo",
+        env={**__import__("os").environ, "PYTHONPATH": "src"})
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rep = json.loads((tmp_path / "train.json").read_text())
+    assert rep["final_step"] == 8
