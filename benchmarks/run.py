@@ -316,6 +316,58 @@ def kernels():
 
 
 # --------------------------------------------------------------------------
+# Unified engine: streaming chunk sweep + vmapped multi-restart
+# --------------------------------------------------------------------------
+
+@bench("engine_scaling")
+def engine_scaling():
+    """Streaming sweep cost vs chunk count (peak [N,K] intermediate shrinks
+    by C) and vmapped multi-restart vs R sequential fits."""
+    import jax
+    import jax.numpy as jnp
+    from repro import core
+    from repro.core.engine import ClusteringEngine, EngineConfig
+
+    rng = np.random.default_rng(0)
+    n, d, k = 200_000, 8, 16
+    x = jnp.asarray(rng.normal(0, 5, (n, d)).astype(np.float32))
+    c0 = core.random_init(jax.random.PRNGKey(0), x, k)
+    rows = []
+
+    def timed(fn, *args, reps=3):
+        jax.block_until_ready(fn(*args))             # compile + warm
+        t0 = time.time()
+        for _ in range(reps):
+            out = fn(*args)
+            jax.block_until_ready(out)
+        return (time.time() - t0) / reps
+
+    for chunks in (1, 8, 32):
+        eng = ClusteringEngine("kmeans", EngineConfig(
+            max_iters=10, chunks=chunks, use_h_stop=False,
+            stop_when_frozen=True))
+        s = timed(lambda: eng.fit(x, c0))
+        rows.append({"name": f"kmeans_stream_c{chunks}_n200k_k16",
+                     "s_per_fit": round(s, 4),
+                     "derived": f"peak_NK={n // max(chunks, 1) * k}"})
+
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=10, use_h_stop=False, stop_when_frozen=True))
+    key = jax.random.PRNGKey(1)
+    r = 4
+    inits = eng.init_restarts(key, x, k, r)
+    s_batch = timed(lambda: eng.fit_restarts(x, inits).best.labels)
+    s_seq = timed(lambda: [eng.fit(x, jax.tree.map(lambda a: a[i], inits))
+                           .labels for i in range(r)])
+    rows.append({"name": f"kmeans_restarts_vmap_r{r}",
+                 "s_per_fit": round(s_batch, 4),
+                 "derived": f"{s_seq / max(s_batch, 1e-9):.2f}x_vs_sequential"})
+    rows.append({"name": f"kmeans_restarts_seq_r{r}",
+                 "s_per_fit": round(s_seq, 4), "derived": "baseline"})
+    return rows
+
+
+# --------------------------------------------------------------------------
 # Roofline table (reads experiments/dryrun/*.json → §Roofline source data)
 # --------------------------------------------------------------------------
 

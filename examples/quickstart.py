@@ -47,3 +47,16 @@ print(f"early stop after {int(iters_es)}/{int(iters_full)} iterations "
       f"→ achieved accuracy {acc:.4f}")
 print(f"cost-effectiveness (Eq. 10): {rep.cost_effectiveness:.2f} "
       f"→ {100 * (1 - rep.cost_effectiveness):.0f}% of the bill cut")
+
+# 6. the same run through the unified engine, at scale: stream the sweep
+#    over 8 chunks (no [N,K] intermediate) and race 4 restarts as one
+#    vmapped program — the threshold rides in via the fitted model.
+cfg = core.EngineConfig.from_longtail(model, 0.99, max_iters=400,
+                                      chunks=8, stop_when_frozen=True)
+eng = core.ClusteringEngine("kmeans", cfg)
+rr = eng.fit_restarts(x, key=jax.random.PRNGKey(99), k=k, restarts=4)
+acc_best = float(core.rand_index(rr.best.labels, labels_full, k, k))
+print(f"engine (8 chunks, 4 restarts): best J={float(rr.best.objective):.1f} "
+      f"from restart {int(rr.best_index)} after "
+      f"{int(rr.best.n_iters)} iters → accuracy {acc_best:.4f} "
+      f"(per-restart iters {list(map(int, rr.n_iters))})")

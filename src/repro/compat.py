@@ -1,0 +1,62 @@
+"""Forward-compatibility shims for older jax runtimes.
+
+The sources and tests target the current jax API surface:
+
+  · ``jax.shard_map`` (with the ``check_vma`` kwarg)
+  · ``jax.sharding.AxisType``
+  · ``jax.make_mesh(..., axis_types=...)``
+
+Older jaxlib builds (e.g. the 0.4.x CPU wheel in the test container) predate
+all three.  Importing this module installs small forwarding shims onto the
+``jax`` namespace — idempotent, and a no-op on a current jax.  Import it
+before touching those APIs (tests do this via ``tests/conftest.py``).
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType:  # stand-in enum; pre-AxisType meshes are untyped
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+        jax.sharding.AxisType = AxisType
+
+    if not hasattr(jax, "make_mesh"):
+        import numpy as _np
+
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            del axis_types  # untyped meshes only on this jax
+            n = int(_np.prod(axis_shapes))
+            devs = list(devices) if devices is not None else jax.devices()[:n]
+            return jax.sharding.Mesh(
+                _np.asarray(devs).reshape(axis_shapes), axis_names)
+
+        jax.make_mesh = make_mesh
+    elif "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            del axis_types  # untyped meshes only on this jax
+            return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+                      **kwargs):
+            return _shard_map(f, mesh, in_specs, out_specs,
+                              check_rep=check_vma, **kwargs)
+
+        jax.shard_map = shard_map
+
+
+install()

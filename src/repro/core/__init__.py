@@ -14,6 +14,9 @@ from .kmeans import (kmeans_step, kmeans_fit_traced, kmeans_fit_earlystop,
                      assign_and_stats, trace_accuracy, trace_to_rh)
 from .em_gmm import (GMMParams, em_step, em_fit_traced, em_fit_earlystop,
                      em_fit_full, init_from_kmeans, estep_stats, log_prob)
+from .engine import (ClusteringEngine, EngineConfig, EngineResult,
+                     RestartResult, KMeansAlgorithm, EMAlgorithm,
+                     get_algorithm)
 from .sampling import GroupedData, random_groups, kfold_split, make_grouped
 from .cost_model import (CostReport, report, landuse_case_study,
                          EC2_ON_DEMAND_USD_PER_HOUR, TPU_ON_DEMAND_USD_PER_HOUR)

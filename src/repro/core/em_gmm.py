@@ -12,7 +12,6 @@ choice and keeps the E-step matmul-friendly.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -25,15 +24,6 @@ class GMMParams(NamedTuple):
     means: jnp.ndarray     # [K, D]
     var: jnp.ndarray       # [K, D] diagonal covariance
     log_w: jnp.ndarray     # [K] log mixture weights
-
-
-class EMState(NamedTuple):
-    params: GMMParams
-    j_prev: jnp.ndarray
-    j_curr: jnp.ndarray
-    h: jnp.ndarray
-    hits: jnp.ndarray
-    iteration: jnp.ndarray
 
 
 VAR_FLOOR = 1e-6
@@ -53,13 +43,19 @@ def log_prob(x, params: GMMParams):
             - 0.5 * (quad + log_det[None, :] + d * _LOG2PI))
 
 
-def estep_stats(x, params: GMMParams, axis_name=None, use_kernel: bool = False):
+def estep_stats(x, params: GMMParams, axis_name=None, use_kernel: bool = False,
+                mask=None):
     """Fused E-step: responsibilities → (labels, loglik, r_sum, r_x, r_x2).
 
     All M-step sufficient statistics come out of one pass over the points —
-    the same contract as the ``gmm_estep`` Pallas kernel.
+    the same contract as the ``gmm_estep`` Pallas kernel.  ``mask``: [N] f32
+    row weights (streaming-chunk padding); jnp path only.
     """
     if use_kernel:
+        if mask is not None:
+            raise NotImplementedError(
+                "mask is handled by the kernel's chunked entry point "
+                "(gmm_estep_chunked), not by estep_stats")
         from repro.kernels.gmm_estep import ops as _gops
         labels, loglik, r_sum, r_x, r_x2 = _gops.gmm_estep(
             x, params.means, params.var, params.log_w)
@@ -68,7 +64,12 @@ def estep_stats(x, params: GMMParams, axis_name=None, use_kernel: bool = False):
         lse = jax.scipy.special.logsumexp(lp, axis=-1)           # [N]
         resp = jnp.exp(lp - lse[:, None])                        # [N,K]
         labels = jnp.argmax(lp, axis=-1).astype(jnp.int32)
-        loglik = jnp.sum(lse)
+        if mask is not None:
+            mask = mask.astype(jnp.float32)
+            resp = resp * mask[:, None]
+            loglik = jnp.sum(lse * mask)
+        else:
+            loglik = jnp.sum(lse)
         r_sum = jnp.sum(resp, axis=0)                            # [K]
         xf = x.astype(jnp.float32)
         r_x = resp.T @ xf                                        # [K,D]
@@ -127,14 +128,18 @@ def random_init(key, x, k: int) -> GMMParams:
 # --------------------------------------------------------------------------
 
 def em_fit_traced(x, params0: GMMParams, max_iters: int = 500,
-                  tol: float = 0.0, use_kernel: bool = False):
+                  tol: float = 0.0, use_kernel: bool = False,
+                  chunks: int = 1):
     """Host loop recording (loglik_i, labels_i) — for training groups."""
-    step = jax.jit(functools.partial(em_step, use_kernel=use_kernel))
+    from .engine import ClusteringEngine, EngineConfig
+    eng = ClusteringEngine("em", EngineConfig(use_kernel=use_kernel,
+                                              chunks=chunks))
     params = params0
+    x = jnp.asarray(x)
     labels_hist, js = [], []
     prev = None
     for _ in range(max_iters):
-        params, labels, loglik = step(jnp.asarray(x), params)
+        params, labels, loglik = eng.step(x, params)
         labels_hist.append(labels)
         js.append(float(loglik))
         if prev is not None and abs(js[-1] - prev) <= tol * max(abs(prev), 1e-30):
@@ -149,43 +154,23 @@ def em_fit_traced(x, params0: GMMParams, max_iters: int = 500,
     }
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("max_iters", "axis_name", "use_kernel",
-                                    "patience"))
 def em_fit_earlystop(x, params0: GMMParams, h_star, max_iters: int = 500,
                      axis_name=None, use_kernel: bool = False,
-                     patience: int = 1):
+                     patience: int = 1, chunks: int = 1):
     """Production driver: stop on device when h_i ≤ h* for ``patience``
     consecutive iterations (Eq. 7 on loglik; see kmeans_fit_earlystop)."""
-    x = x.astype(jnp.float32)
-    init = EMState(params=params0,
-                   j_prev=jnp.asarray(jnp.inf, jnp.float32),
-                   j_curr=jnp.asarray(jnp.inf, jnp.float32),
-                   h=jnp.asarray(jnp.inf, jnp.float32),
-                   hits=jnp.asarray(0, jnp.int32),
-                   iteration=jnp.asarray(0, jnp.int32))
-
-    def cond(s: EMState):
-        not_stopped = jnp.logical_or(s.iteration < 2, s.hits < patience)
-        return jnp.logical_and(not_stopped, s.iteration < max_iters)
-
-    def body(s: EMState):
-        params, _, j = em_step(x, s.params, axis_name=axis_name,
-                               use_kernel=use_kernel)
-        h = jnp.where(
-            jnp.isfinite(s.j_curr),
-            jnp.abs(j - s.j_curr) / jnp.maximum(jnp.abs(s.j_curr), 1e-30),
-            jnp.asarray(jnp.inf, jnp.float32))
-        hits = jnp.where(h <= h_star, s.hits + 1, 0)
-        return EMState(params, s.j_curr, j, h, hits, s.iteration + 1)
-
-    final = jax.lax.while_loop(cond, body, init)
-    labels, loglik, *_ = estep_stats(x, final.params, axis_name, use_kernel)
-    return final.params, labels, loglik, final.iteration
+    from .engine import ClusteringEngine, EngineConfig
+    eng = ClusteringEngine("em", EngineConfig(
+        max_iters=max_iters, patience=patience, chunks=chunks,
+        axis_name=axis_name, use_kernel=use_kernel,
+        use_h_stop=True, stop_when_frozen=False))
+    res = eng.fit(x, params0, h_star=h_star)
+    return res.params, res.labels, res.objective, res.n_iters
 
 
 def em_fit_full(x, params0: GMMParams, max_iters: int = 1000, axis_name=None,
-                use_kernel: bool = False):
+                use_kernel: bool = False, chunks: int = 1):
     """Reference run: converge to (near) machine-precision loglik stability."""
     return em_fit_earlystop(x, params0, h_star=1e-12, max_iters=max_iters,
-                            axis_name=axis_name, use_kernel=use_kernel)
+                            axis_name=axis_name, use_kernel=use_kernel,
+                            chunks=chunks)

@@ -1,0 +1,453 @@
+"""Unified streaming clustering engine — one driver for k-means and EM.
+
+The monolithic ``kmeans_fit_*`` / ``em_fit_*`` drivers each hand-rolled the
+same while_loop + Eq. 7 predicate and required the whole [N, D] array (and a
+materialised [N, K] distance/responsibility matrix) resident on one device.
+This module folds them behind a small algorithm protocol
+(``init / chunk_stats / update / objective``) and adds two scale axes:
+
+  · **streaming assignment** — a ``lax.scan`` over [C, N/C, D] chunks
+    accumulates the additive sufficient statistics ((sums, counts, J) for
+    k-means; (r_sum, r_x, r_x2, loglik) for EM) so the [N, K] intermediate
+    never exists for more than one chunk at a time; N is bounded by HBM
+    streaming bandwidth rather than device memory.  The per-sweep result is
+    bit-for-bit the same contract the Pallas kernels produce, and composes
+    with the ``axis_name`` psum path (shard_map over the data axes): stats
+    are accumulated locally, then psum'd once per sweep.
+
+  · **multi-restart via ``vmap``** — R seeds run as one batched program.
+    Each restart carries its own early-stop mask; once a restart trips the
+    h_i ≤ h* predicate its state is frozen and the (still batched) body
+    becomes a no-op for it.  The engine returns the best-objective restart —
+    the standard production guard against bad initialisation.
+
+Thresholds from an offline-fitted ``earlystop.LongTailModel`` enter through
+``EngineConfig.from_longtail`` so the paper pipeline (fit h(r) once, reuse
+h* = f(r*) forever) drives the same engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import em_gmm as _em
+from . import kmeans as _km
+
+_EPS = 1e-30
+
+
+# --------------------------------------------------------------------------
+# Algorithm protocol: init / chunk_stats / update / objective (+ kernels)
+# --------------------------------------------------------------------------
+# Implementations are stateless singletons; __eq__/__hash__ by type so they
+# are stable jit static arguments across engine instances.
+
+class KMeansAlgorithm:
+    """Lloyd's k-means.  Params: centroids [K, D].  Stats: (sums, counts, J)."""
+
+    name = "kmeans"
+    maximize = False
+
+    def __hash__(self):
+        return hash(type(self).__name__)
+
+    def __eq__(self, other):
+        return type(other) is type(self)
+
+    def init(self, key, x, k: int):
+        return _km.kmeans_plus_plus_init(key, x, k)
+
+    def zero_stats(self, params):
+        k, d = params.shape
+        return (jnp.zeros((k, d), jnp.float32), jnp.zeros((k,), jnp.float32),
+                jnp.zeros((), jnp.float32))
+
+    def chunk_stats(self, xc, mask, params):
+        labels, sums, counts, j = _km.assign_and_stats(xc, params, mask=mask)
+        return labels, (sums, counts, j)
+
+    def kernel_stats(self, x, params, chunks: int):
+        from repro.kernels.kmeans_assign import ops as _kops
+        labels, sums, counts, j = _kops.kmeans_assign_chunked(
+            x, params, chunks=chunks)
+        return labels, (sums, counts, j)
+
+    def update(self, params, stats, n_total):
+        sums, counts, _ = stats
+        return _km.update_centroids(params, sums, counts)
+
+    def objective(self, stats):
+        return stats[2]
+
+    def moved(self, new_params, params):
+        return jnp.any(new_params != params)
+
+
+class EMAlgorithm:
+    """Diagonal-covariance GMM via EM.  Params: GMMParams.
+    Stats: (r_sum, r_x, r_x2, loglik)."""
+
+    name = "em"
+    maximize = True
+
+    def __hash__(self):
+        return hash(type(self).__name__)
+
+    def __eq__(self, other):
+        return type(other) is type(self)
+
+    def init(self, key, x, k: int):
+        return _em.random_init(key, x, k)
+
+    def zero_stats(self, params):
+        k, d = params.means.shape
+        return (jnp.zeros((k,), jnp.float32), jnp.zeros((k, d), jnp.float32),
+                jnp.zeros((k, d), jnp.float32), jnp.zeros((), jnp.float32))
+
+    def chunk_stats(self, xc, mask, params):
+        labels, loglik, r_sum, r_x, r_x2 = _em.estep_stats(
+            xc, params, mask=mask)
+        return labels, (r_sum, r_x, r_x2, loglik)
+
+    def kernel_stats(self, x, params, chunks: int):
+        from repro.kernels.gmm_estep import ops as _gops
+        labels, loglik, r_sum, r_x, r_x2 = _gops.gmm_estep_chunked(
+            x, params.means, params.var, params.log_w, chunks=chunks)
+        return labels, (r_sum, r_x, r_x2, loglik)
+
+    def update(self, params, stats, n_total):
+        r_sum, r_x, r_x2, _ = stats
+        return _em.mstep(params, r_sum, r_x, r_x2, n_total)
+
+    def objective(self, stats):
+        return stats[3]
+
+    def moved(self, new_params, params):
+        # EM has no frozen-partition fixed point at fp granularity; the
+        # engine never gates EM on movement (stop_when_frozen=False).
+        return jnp.asarray(True)
+
+
+KMEANS = KMeansAlgorithm()
+EM = EMAlgorithm()
+_ALGORITHMS = {"kmeans": KMEANS, "em": EM}
+
+
+def get_algorithm(algorithm):
+    if isinstance(algorithm, str):
+        return _ALGORITHMS[algorithm]
+    return algorithm
+
+
+# --------------------------------------------------------------------------
+# Config + results
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static (hashable) engine configuration — one jit cache entry each.
+
+    ``h_star`` here is the *default* threshold; ``fit`` accepts a traced
+    override so sweeping thresholds does not retrace.
+    """
+    max_iters: int = 300
+    h_star: float = 0.0
+    patience: int = 1
+    chunks: int = 1                 # C streaming chunks per sweep
+    axis_name: Any = None           # psum stats over these mesh axes
+    use_kernel: bool = False        # route sweeps through the Pallas kernels
+    use_h_stop: bool = True         # apply the h_i <= h* long-tail predicate
+    stop_when_frozen: bool = False  # stop when params stop moving (k-means)
+
+    @classmethod
+    def from_longtail(cls, model, desired_accuracy: float, **kw):
+        """Route a fitted LongTailModel through the engine: h* = f(r*)."""
+        return cls(h_star=float(model.threshold_for(desired_accuracy)), **kw)
+
+
+class EngineResult(NamedTuple):
+    params: Any                 # centroids [K,D] | GMMParams
+    labels: jnp.ndarray         # [N] int32 (local rows under shard_map)
+    objective: jnp.ndarray      # [] J / loglik at the final params
+    n_iters: jnp.ndarray        # [] int32
+    h: jnp.ndarray              # [] last change rate observed
+
+
+class RestartResult(NamedTuple):
+    best: EngineResult          # the argbest-objective restart
+    best_index: jnp.ndarray     # [] int32
+    objectives: jnp.ndarray     # [R] final objective per restart
+    n_iters: jnp.ndarray        # [R] iterations per restart
+
+
+# --------------------------------------------------------------------------
+# Streaming sweep
+# --------------------------------------------------------------------------
+
+def _chunk_points(x, chunks: int):
+    """[N, D] → ([C, ceil(N/C), D], mask [C, ceil(N/C)]) with zero-padding."""
+    n, d = x.shape
+    c = max(1, min(int(chunks), n))
+    per = -(-n // c)
+    pad = c * per - n
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    mask = (jnp.arange(c * per) < n).astype(jnp.float32).reshape(c, per)
+    return xp.reshape(c, per, d), mask
+
+
+def _sweep(alg, config: EngineConfig, x, params, with_labels: bool):
+    """One full pass over the points → (labels | None, sufficient stats).
+
+    chunks=1 runs the monolithic fused pass; chunks>1 streams via lax.scan
+    (pure-JAX path) or via the kernels' chunked entry points (fused path,
+    static slices — each chunk keeps the kernel's own n_valid masking).
+    Stats are psum'd over ``axis_name`` once per sweep.
+    """
+    if config.use_kernel:
+        labels, stats = alg.kernel_stats(x, params, config.chunks)
+        if not with_labels:
+            labels = None
+    elif config.chunks <= 1:
+        ones = jnp.ones((x.shape[0],), jnp.float32)
+        labels, stats = alg.chunk_stats(x, ones, params)
+        if not with_labels:
+            labels = None
+    else:
+        xc, mask = _chunk_points(x, config.chunks)
+
+        def body(acc, inp):
+            xi, mi = inp
+            lab, st = alg.chunk_stats(xi, mi, params)
+            acc = jax.tree.map(jnp.add, acc, st)
+            return acc, (lab if with_labels else jnp.zeros((), jnp.int32))
+
+        stats, labs = jax.lax.scan(body, alg.zero_stats(params), (xc, mask))
+        labels = labs.reshape(-1)[: x.shape[0]] if with_labels else None
+    if config.axis_name is not None:
+        stats = jax.tree.map(
+            lambda a: jax.lax.psum(a, config.axis_name), stats)
+    return labels, stats
+
+
+def _global_n(x, config: EngineConfig):
+    n = jnp.asarray(x.shape[0], jnp.float32)
+    if config.axis_name is not None:
+        n = jax.lax.psum(n, config.axis_name)
+    return n
+
+
+# --------------------------------------------------------------------------
+# Single-restart driver
+# --------------------------------------------------------------------------
+
+class _State(NamedTuple):
+    params: Any
+    j_curr: jnp.ndarray
+    h: jnp.ndarray
+    hits: jnp.ndarray
+    iteration: jnp.ndarray
+    moved: jnp.ndarray
+
+
+def _live(config: EngineConfig, iteration, hits, moved):
+    """Continue-predicate shared by cond() and the per-restart masks."""
+    live = iteration < config.max_iters
+    if config.use_h_stop:
+        live = jnp.logical_and(
+            live, jnp.logical_or(iteration < 2, hits < config.patience))
+    if config.stop_when_frozen:
+        live = jnp.logical_and(live, moved)
+    return live
+
+
+@functools.partial(jax.jit, static_argnames=("alg", "config"))
+def _fit(x, params0, h_star, alg, config: EngineConfig):
+    x = x.astype(jnp.float32)
+    n_total = _global_n(x, config)
+    init = _State(
+        params=jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0),
+        j_curr=jnp.asarray(jnp.inf, jnp.float32),
+        h=jnp.asarray(jnp.inf, jnp.float32),
+        hits=jnp.asarray(0, jnp.int32),
+        iteration=jnp.asarray(0, jnp.int32),
+        moved=jnp.asarray(True),
+    )
+
+    def cond(s: _State):
+        return _live(config, s.iteration, s.hits, s.moved)
+
+    def body(s: _State):
+        _, stats = _sweep(alg, config, x, s.params, with_labels=False)
+        j = alg.objective(stats)
+        new_params = alg.update(s.params, stats, n_total)
+        h = jnp.where(
+            jnp.isfinite(s.j_curr),
+            jnp.abs(j - s.j_curr) / jnp.maximum(jnp.abs(s.j_curr), _EPS),
+            jnp.asarray(jnp.inf, jnp.float32))
+        hits = jnp.where(h <= h_star, s.hits + 1, 0)
+        moved = alg.moved(new_params, s.params)
+        return _State(new_params, j, h, hits, s.iteration + 1, moved)
+
+    final = jax.lax.while_loop(cond, body, init)
+    labels, stats = _sweep(alg, config, x, final.params, with_labels=True)
+    return EngineResult(final.params, labels, alg.objective(stats),
+                        final.iteration, final.h)
+
+
+@functools.partial(jax.jit, static_argnames=("alg", "config"))
+def _step(x, params, alg, config: EngineConfig):
+    """One iteration: (new_params, labels, objective) — the traced drivers'
+    building block, so host-loop and on-device paths share one sweep."""
+    x = x.astype(jnp.float32)
+    n_total = _global_n(x, config)
+    labels, stats = _sweep(alg, config, x, params, with_labels=True)
+    return alg.update(params, stats, n_total), labels, alg.objective(stats)
+
+
+# --------------------------------------------------------------------------
+# Multi-restart driver (vmap + per-restart stop masks)
+# --------------------------------------------------------------------------
+
+class _BatchState(NamedTuple):
+    params: Any                 # [R, ...]
+    j_curr: jnp.ndarray         # [R]
+    h: jnp.ndarray              # [R]
+    hits: jnp.ndarray           # [R] int32
+    n_iters: jnp.ndarray        # [R] int32
+    moved: jnp.ndarray          # [R] bool
+    active: jnp.ndarray         # [R] bool — restart still iterating
+
+
+def _mask_tree(active, new, old):
+    """Per-leaf jnp.where with `active` broadcast over trailing dims."""
+    def one(n, o):
+        a = active.reshape(active.shape + (1,) * (n.ndim - 1))
+        return jnp.where(a, n, o)
+    return jax.tree.map(one, new, old)
+
+
+@functools.partial(jax.jit, static_argnames=("alg", "config"))
+def _fit_restarts(x, params0, h_star, alg, config: EngineConfig):
+    x = x.astype(jnp.float32)
+    n_total = _global_n(x, config)
+    r = jax.tree.leaves(params0)[0].shape[0]
+
+    sweep_stats = jax.vmap(
+        lambda p: _sweep(alg, config, x, p, with_labels=False)[1])
+    sweep_labels = jax.vmap(
+        lambda p: _sweep(alg, config, x, p, with_labels=True))
+    update_v = jax.vmap(alg.update, in_axes=(0, 0, None))
+    objective_v = jax.vmap(alg.objective)
+    moved_v = jax.vmap(alg.moved)
+
+    inf = jnp.full((r,), jnp.inf, jnp.float32)
+    zeros_i = jnp.zeros((r,), jnp.int32)
+    true_b = jnp.ones((r,), bool)
+    init = _BatchState(
+        params=jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0),
+        j_curr=inf, h=inf, hits=zeros_i, n_iters=zeros_i,
+        moved=true_b, active=_live(config, zeros_i, zeros_i, true_b),
+    )
+
+    def cond(s: _BatchState):
+        return jnp.any(s.active)
+
+    def body(s: _BatchState):
+        # every restart computes; stopped restarts are masked back to their
+        # frozen state (the "no-op body" — XLA keeps one batched program)
+        stats = sweep_stats(s.params)
+        j = objective_v(stats)
+        new_params = update_v(s.params, stats, n_total)
+        h = jnp.where(
+            jnp.isfinite(s.j_curr),
+            jnp.abs(j - s.j_curr) / jnp.maximum(jnp.abs(s.j_curr), _EPS),
+            jnp.inf).astype(jnp.float32)
+        hits = jnp.where(h <= h_star, s.hits + 1, 0)
+        moved = moved_v(new_params, s.params)
+        a = s.active
+        params = _mask_tree(a, new_params, s.params)
+        j_curr = jnp.where(a, j, s.j_curr)
+        h_out = jnp.where(a, h, s.h)
+        hits_out = jnp.where(a, hits, s.hits)
+        n_iters = jnp.where(a, s.n_iters + 1, s.n_iters)
+        moved_out = jnp.where(a, moved, s.moved)
+        active = jnp.logical_and(
+            a, _live(config, n_iters, hits_out, moved_out))
+        return _BatchState(params, j_curr, h_out, hits_out, n_iters,
+                           moved_out, active)
+
+    final = jax.lax.while_loop(cond, body, init)
+    labels, stats = sweep_labels(final.params)
+    objectives = objective_v(stats)
+    best = (jnp.argmax(objectives) if alg.maximize
+            else jnp.argmin(objectives)).astype(jnp.int32)
+    best_result = EngineResult(
+        params=jax.tree.map(lambda a: a[best], final.params),
+        labels=labels[best],
+        objective=objectives[best],
+        n_iters=final.n_iters[best],
+        h=final.h[best],
+    )
+    return RestartResult(best=best_result, best_index=best,
+                         objectives=objectives, n_iters=final.n_iters)
+
+
+# --------------------------------------------------------------------------
+# Public facade
+# --------------------------------------------------------------------------
+
+class ClusteringEngine:
+    """One engine, two algorithms, three drivers (step / fit / fit_restarts).
+
+    >>> eng = ClusteringEngine("kmeans", EngineConfig(chunks=8, max_iters=100,
+    ...                                               stop_when_frozen=True))
+    >>> res = eng.fit(x, eng.init(key, x, k=8), h_star=1e-4)
+    >>> best = eng.fit_restarts(x, key=key, k=8, restarts=4).best
+    """
+
+    def __init__(self, algorithm="kmeans", config: EngineConfig | None = None):
+        self.algorithm = get_algorithm(algorithm)
+        self.config = config if config is not None else EngineConfig()
+
+    # -- initialisation ----------------------------------------------------
+    def init(self, key, x, k: int):
+        return self.algorithm.init(key, jnp.asarray(x), k)
+
+    def init_restarts(self, key, x, k: int, restarts: int):
+        """R independent seeds, stacked along a leading restart axis."""
+        x = jnp.asarray(x)
+        keys = jax.random.split(key, restarts)
+        inits = [self.algorithm.init(kk, x, k) for kk in keys]
+        return jax.tree.map(lambda *leaves: jnp.stack(leaves), *inits)
+
+    # -- drivers -----------------------------------------------------------
+    def step(self, x, params):
+        """One iteration → (new_params, labels, objective)."""
+        return _step(jnp.asarray(x), params, self.algorithm, self.config)
+
+    def fit(self, x, params0, h_star=None) -> EngineResult:
+        hs = self.config.h_star if h_star is None else h_star
+        return _fit(jnp.asarray(x), params0, jnp.asarray(hs, jnp.float32),
+                    self.algorithm, self.config)
+
+    def fit_restarts(self, x, params0=None, *, key=None, k=None,
+                     restarts=None, h_star=None) -> RestartResult:
+        """Batched multi-restart fit; pass stacked ``params0`` or
+        (key, k, restarts) to draw them."""
+        x = jnp.asarray(x)
+        if params0 is None:
+            if key is None or k is None or restarts is None:
+                raise ValueError(
+                    "fit_restarts needs params0 or (key, k, restarts)")
+            params0 = self.init_restarts(key, x, k, restarts)
+        if self.config.use_kernel:
+            raise NotImplementedError(
+                "multi-restart vmap over the Pallas kernels is not wired up; "
+                "use use_kernel=False for fit_restarts")
+        hs = self.config.h_star if h_star is None else h_star
+        return _fit_restarts(x, params0, jnp.asarray(hs, jnp.float32),
+                             self.algorithm, self.config)

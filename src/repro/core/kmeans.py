@@ -5,45 +5,41 @@ cost is an [N,D]×[D,K] matmul (TPU adaptation, DESIGN.md §2).  One fused pass
 produces labels, per-cluster sums/counts and the objective J — the same
 contract the Pallas kernel (``repro.kernels.kmeans_assign``) implements.
 
-Three drivers:
+Three drivers — all thin wrappers over ``repro.core.engine`` since ISSUE 1:
   · ``kmeans_fit_traced``     — host loop, records (J_i, labels_i) per
     iteration; used on *training groups* to harvest (r_i, h_i) pairs.
   · ``kmeans_fit_earlystop``  — ``lax.while_loop`` with the h ≤ h* predicate
     **on device**; the production path (§4).
-  · ``kmeans_fit_full``       — run to convergence (the paper's 100%-accuracy
-    reference, Time_full).
+  · ``kmeans_fit_full``       — run to convergence: stops only when the
+    centroids freeze (the paper's 100%-accuracy reference, Time_full).
 
 All three accept ``axis_name`` so the same code runs under ``shard_map`` with
 points sharded over the data axes: the only cross-shard traffic per iteration
-is a psum of [K,D]+[K]+[1] statistics.
+is a psum of [K,D]+[K]+[1] statistics.  ``chunks`` streams the assignment
+pass over N/C-sized pieces (see the engine docstring).
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 
-class KMeansState(NamedTuple):
-    centroids: jnp.ndarray   # [K, D]
-    j_prev: jnp.ndarray      # [] previous objective
-    j_curr: jnp.ndarray      # [] current objective
-    h: jnp.ndarray           # [] change rate (Eq. 7)
-    hits: jnp.ndarray        # [] int32 — consecutive h ≤ h* readings
-    iteration: jnp.ndarray   # [] int32
-    moved: jnp.ndarray       # [] bool — any centroid moved this iteration
-
-
-def assign_and_stats(x, centroids, axis_name=None, use_kernel: bool = False):
+def assign_and_stats(x, centroids, axis_name=None, use_kernel: bool = False,
+                     mask=None):
     """Fused assignment pass.
 
     Returns (labels [N] int32, sums [K,D] f32, counts [K] f32, j []).
     ``axis_name``: psum the statistics over those mesh axes (shard_map mode).
     ``use_kernel``: route through the Pallas kernel (TPU target; interpret on CPU).
+    ``mask``: [N] f32 row weights (streaming-chunk padding); jnp path only.
     """
     if use_kernel:
+        if mask is not None:
+            raise NotImplementedError(
+                "mask is handled by the kernel's chunked entry point "
+                "(kmeans_assign_chunked), not by assign_and_stats")
         from repro.kernels.kmeans_assign import ops as _kops
         labels, sums, counts, j = _kops.kmeans_assign(x, centroids)
     else:
@@ -54,10 +50,16 @@ def assign_and_stats(x, centroids, axis_name=None, use_kernel: bool = False):
         d2 = x2 - 2.0 * (x @ c.T) + c2[None, :]              # [N,K] (MXU matmul)
         labels = jnp.argmin(d2, axis=-1).astype(jnp.int32)
         mind2 = jnp.maximum(jnp.min(d2, axis=-1), 0.0)       # clamp fp cancellation
-        j = jnp.sum(mind2)
         k = centroids.shape[0]
-        sums = jnp.zeros_like(c).at[labels].add(x)
-        counts = jnp.zeros((k,), jnp.float32).at[labels].add(1.0)
+        if mask is None:
+            j = jnp.sum(mind2)
+            sums = jnp.zeros_like(c).at[labels].add(x)
+            counts = jnp.zeros((k,), jnp.float32).at[labels].add(1.0)
+        else:
+            mask = mask.astype(jnp.float32)
+            j = jnp.sum(mind2 * mask)
+            sums = jnp.zeros_like(c).at[labels].add(x * mask[:, None])
+            counts = jnp.zeros((k,), jnp.float32).at[labels].add(mask)
     if axis_name is not None:
         sums = jax.lax.psum(sums, axis_name)
         counts = jax.lax.psum(counts, axis_name)
@@ -116,18 +118,21 @@ def kmeans_plus_plus_init(key, x, k: int):
 # --------------------------------------------------------------------------
 
 def kmeans_fit_traced(x, centroids0, max_iters: int = 300,
-                      use_kernel: bool = False):
+                      use_kernel: bool = False, chunks: int = 1):
     """Host-side loop recording the per-iteration history (training groups).
 
     Returns dict with: labels_history [T,N], objectives [T], final labels,
     centroids, and n_iters.  Runs until the partition is stable or max_iters.
     """
-    step = jax.jit(functools.partial(kmeans_step, use_kernel=use_kernel))
+    from .engine import ClusteringEngine, EngineConfig
+    eng = ClusteringEngine("kmeans", EngineConfig(use_kernel=use_kernel,
+                                                  chunks=chunks))
     centroids = jnp.asarray(centroids0, jnp.float32)
+    x = jnp.asarray(x)
     labels_hist, js = [], []
     prev_labels = None
     for _ in range(max_iters):
-        centroids, labels, j = step(jnp.asarray(x), centroids)
+        centroids, labels, j = eng.step(x, centroids)
         labels_hist.append(labels)
         js.append(float(j))
         if prev_labels is not None and bool(jnp.all(labels == prev_labels)):
@@ -159,12 +164,9 @@ def trace_to_rh(result, k: int):
     return r[1:], h
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("max_iters", "axis_name", "use_kernel",
-                                    "patience"))
 def kmeans_fit_earlystop(x, centroids0, h_star, max_iters: int = 300,
                          axis_name=None, use_kernel: bool = False,
-                         patience: int = 1):
+                         patience: int = 1, chunks: int = 1):
     """Production driver: lax.while_loop, stop when h_i ≤ h* (on device).
 
     ``patience`` requires that many CONSECUTIVE sub-threshold readings —
@@ -176,40 +178,27 @@ def kmeans_fit_earlystop(x, centroids0, h_star, max_iters: int = 300,
     shard sees the same h_i and the loop cannot diverge across devices.
     Returns (centroids, labels, j, n_iters).
     """
-    x = x.astype(jnp.float32)
-    init = KMeansState(
-        centroids=jnp.asarray(centroids0, jnp.float32),
-        j_prev=jnp.asarray(jnp.inf, jnp.float32),
-        j_curr=jnp.asarray(jnp.inf, jnp.float32),
-        h=jnp.asarray(jnp.inf, jnp.float32),
-        hits=jnp.asarray(0, jnp.int32),
-        iteration=jnp.asarray(0, jnp.int32),
-        moved=jnp.asarray(True),
-    )
-
-    def cond(s: KMeansState):
-        not_stopped = jnp.logical_or(s.iteration < 2, s.hits < patience)
-        return jnp.logical_and(
-            jnp.logical_and(not_stopped, s.moved),
-            s.iteration < max_iters)
-
-    def body(s: KMeansState):
-        new_c, _, j = kmeans_step(x, s.centroids, axis_name, use_kernel)
-        h = jnp.where(
-            jnp.isfinite(s.j_curr),
-            jnp.abs(j - s.j_curr) / jnp.maximum(jnp.abs(s.j_curr), 1e-30),
-            jnp.asarray(jnp.inf, jnp.float32))
-        hits = jnp.where(h <= h_star, s.hits + 1, 0)
-        moved = jnp.any(new_c != s.centroids)
-        return KMeansState(new_c, s.j_curr, j, h, hits, s.iteration + 1, moved)
-
-    final = jax.lax.while_loop(cond, body, init)
-    labels, _, _, j = assign_and_stats(x, final.centroids, axis_name, use_kernel)
-    return final.centroids, labels, j, final.iteration
+    from .engine import ClusteringEngine, EngineConfig
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=max_iters, patience=patience, chunks=chunks,
+        axis_name=axis_name, use_kernel=use_kernel,
+        use_h_stop=True, stop_when_frozen=True))
+    res = eng.fit(x, centroids0, h_star=h_star)
+    return res.params, res.labels, res.objective, res.n_iters
 
 
 def kmeans_fit_full(x, centroids0, max_iters: int = 1000, axis_name=None,
-                    use_kernel: bool = False):
-    """Run to full convergence (h* = 0 → stop only when centroids freeze)."""
-    return kmeans_fit_earlystop(x, centroids0, h_star=0.0, max_iters=max_iters,
-                                axis_name=axis_name, use_kernel=use_kernel)
+                    use_kernel: bool = False, chunks: int = 1):
+    """Run to full convergence: stop only when the centroids freeze.
+
+    Deliberately NOT ``h* = 0``: near convergence the fp32 objective can
+    plateau bit-for-bit (ΔJ below J's ulp) while boundary points are still
+    migrating, so an h-based stop with h*=0 / patience=1 would return
+    centroids that are not a Lloyd fixed point (ISSUE 1 regression).
+    """
+    from .engine import ClusteringEngine, EngineConfig
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=max_iters, chunks=chunks, axis_name=axis_name,
+        use_kernel=use_kernel, use_h_stop=False, stop_when_frozen=True))
+    res = eng.fit(x, centroids0)
+    return res.params, res.labels, res.objective, res.n_iters

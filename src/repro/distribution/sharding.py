@@ -122,6 +122,32 @@ def param_shardings(params_struct, mesh: Mesh, *, fsdp: bool = True):
 
 
 # --------------------------------------------------------------------------
+# Clustering point sets (ClusteringEngine data-parallel path)
+# --------------------------------------------------------------------------
+
+def points_spec(mesh: Mesh) -> P:
+    """[N, D] clustering points: N over the data axes, D replicated — the
+    layout the engine's per-sweep psum of [K,D]+[K]+[1] stats assumes."""
+    dp, _, _ = mesh_axes(mesh)
+    return P(dp if dp else None, None)
+
+
+def shard_points(x, mesh: Mesh):
+    """Truncate N to a multiple of the data-axis extent and place the array.
+
+    Returns (sharded [N', D] jax.Array, n_dropped).  Truncation (vs padding)
+    keeps every resident row a real point, so the engine needs no global
+    validity mask; callers stream the dropped tail separately if they care.
+    """
+    dp, _, _ = mesh_axes(mesh)
+    size = _axis_size(mesh, dp) if dp else 1
+    n = x.shape[0] // size * size
+    xs = jax.device_put(jax.numpy.asarray(x[:n]),
+                        NamedSharding(mesh, points_spec(mesh)))
+    return xs, x.shape[0] - n
+
+
+# --------------------------------------------------------------------------
 # Activation hint rules
 # --------------------------------------------------------------------------
 

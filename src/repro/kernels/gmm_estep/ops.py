@@ -49,3 +49,27 @@ def gmm_estep(x, means, var, log_w, *, block_n: int = 1024,
     n = x.shape[0]
     block_n = min(block_n, _round_up(max(n, 8), 8))
     return _padded_call(x, means, var, log_w, block_n, interpret)
+
+
+def gmm_estep_chunked(x, means, var, log_w, *, chunks: int = 1,
+                      block_n: int = 1024, interpret: bool | None = None):
+    """Streaming entry point for the fused E-step (engine ``chunks`` mode).
+
+    Statically slices N, runs the kernel per slice, accumulates the additive
+    sufficient statistics.  Same contract as ``gmm_estep``.
+    """
+    from repro.kernels.kmeans_assign.ops import chunk_bounds
+    n = x.shape[0]
+    if chunks <= 1 or n <= 1:
+        return gmm_estep(x, means, var, log_w, block_n=block_n,
+                         interpret=interpret)
+    labels, loglik, r_sum, r_x, r_x2 = [], None, None, None, None
+    for a, b in chunk_bounds(n, chunks):
+        lab, ll, rs, rx, rx2 = gmm_estep(x[a:b], means, var, log_w,
+                                         block_n=block_n, interpret=interpret)
+        labels.append(lab)
+        loglik = ll if loglik is None else loglik + ll
+        r_sum = rs if r_sum is None else r_sum + rs
+        r_x = rx if r_x is None else r_x + rx
+        r_x2 = rx2 if r_x2 is None else r_x2 + rx2
+    return jnp.concatenate(labels), loglik, r_sum, r_x, r_x2

@@ -53,3 +53,36 @@ def kmeans_assign(x, centroids, *, block_n: int = 1024,
     n = x.shape[0]
     block_n = min(block_n, _round_up(max(n, 8), 8))
     return _padded_call(x, centroids, block_n, interpret)
+
+
+def chunk_bounds(n: int, chunks: int) -> list[tuple[int, int]]:
+    """Static [start, stop) slices covering N in ``chunks`` pieces; the last
+    piece absorbs the remainder when chunks does not divide N."""
+    c = max(1, min(int(chunks), n))
+    per = -(-n // c)
+    return [(s, min(s + per, n)) for s in range(0, n, per)]
+
+
+def kmeans_assign_chunked(x, centroids, *, chunks: int = 1,
+                          block_n: int = 1024,
+                          interpret: bool | None = None):
+    """Streaming entry point for the fused kernel (engine ``chunks`` mode).
+
+    Slices N into statically-sized pieces, runs the kernel per piece (each
+    call keeps the kernel's own n_valid masking), and accumulates the
+    additive statistics — so the [N, K] intermediate never exceeds one
+    chunk.  Same contract as ``kmeans_assign``.
+    """
+    n = x.shape[0]
+    if chunks <= 1 or n <= 1:
+        return kmeans_assign(x, centroids, block_n=block_n,
+                             interpret=interpret)
+    labels, sums, counts, j = [], None, None, None
+    for a, b in chunk_bounds(n, chunks):
+        lab, s, cnt, jj = kmeans_assign(x[a:b], centroids, block_n=block_n,
+                                        interpret=interpret)
+        labels.append(lab)
+        sums = s if sums is None else sums + s
+        counts = cnt if counts is None else counts + cnt
+        j = jj if j is None else j + jj
+    return jnp.concatenate(labels), sums, counts, j

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat  # noqa: F401  (shard_map / make_mesh shims)
 from repro import core
 from repro.core import em_gmm
 from repro.data import load as load_data, spacenet_pixels
@@ -58,26 +59,78 @@ def train_regression(groups, k: int, algorithm: str, *, max_iters: int,
 
 def run_production(x, k: int, algorithm: str, h_star: float, *,
                    max_iters: int, seed: int = 0, shard: bool = False,
-                   use_kernel: bool = False, patience: int = 3):
-    """Early-stopped production run; optional shard_map over host devices."""
+                   use_kernel: bool = False, patience: int = 3,
+                   chunks: int = 1, restarts: int = 1,
+                   model=None, desired_accuracy: float | None = None):
+    """Early-stopped production run; optional shard_map over host devices.
+
+    ``chunks`` streams each sweep over N/C pieces; ``restarts`` runs R seeds
+    as one vmapped program and keeps the best objective.  Pass a fitted
+    ``model`` (LongTailModel) + ``desired_accuracy`` to derive the threshold
+    through ``EngineConfig.from_longtail`` instead of a raw ``h_star``.
+
+    For k-means, ``h_star == 0.0`` (no model) means the full-convergence
+    reference run: stop only when the centroids freeze.  An h-based stop at
+    h*=0 quits on fp32 J plateaus before the Lloyd fixed point (see
+    ``kmeans_fit_full``), which would corrupt the Time_full baseline.
+    """
+    from repro.core.engine import ClusteringEngine, EngineConfig
     key = jax.random.PRNGKey(seed)
     x = jnp.asarray(x)
+
+    full_reference = (algorithm == "kmeans" and model is None
+                      and float(h_star) == 0.0)
+    cfg_kw = dict(max_iters=max_iters, patience=patience, chunks=chunks,
+                  use_kernel=use_kernel, use_h_stop=not full_reference,
+                  stop_when_frozen=(algorithm == "kmeans"))
+    if model is not None:
+        if desired_accuracy is None:
+            raise ValueError("model routing needs desired_accuracy")
+        cfg = EngineConfig.from_longtail(model, desired_accuracy, **cfg_kw)
+    else:
+        cfg = EngineConfig(h_star=float(h_star), **cfg_kw)
+
+    if restarts > 1 and shard and len(jax.devices()) > 1:
+        # vmapped restarts inside shard_map is an open item (ROADMAP);
+        # fail loud rather than silently dropping R-1 restarts.
+        raise NotImplementedError(
+            "multi-restart + sharded fit is not supported yet; "
+            "drop --shard or --restarts")
+    if restarts > 1:
+        eng = ClusteringEngine(algorithm, cfg)
+        if algorithm == "em":
+            # match the single-restart init quality: kmeans++-seeded GMMs
+            # per restart (the engine default draws uniform data points)
+            keys = jax.random.split(key, restarts)
+            inits = [em_gmm.init_from_kmeans(
+                x, core.kmeans_plus_plus_init(kk, x, k)) for kk in keys]
+            params0 = jax.tree.map(lambda *ls: jnp.stack(ls), *inits)
+        else:
+            params0 = eng.init_restarts(key, x, k, restarts)
+        t0 = time.time()
+        rr = eng.fit_restarts(x, params0)
+        jax.block_until_ready(rr.best.labels)
+        return (rr.best.labels, float(rr.best.objective),
+                int(rr.best.n_iters), time.time() - t0)
+
     c0 = core.kmeans_plus_plus_init(key, x, k)
+    h_star = cfg.h_star
 
     if shard and len(jax.devices()) > 1:
         from jax.sharding import PartitionSpec as P
         from jax import shard_map
+        from repro.distribution.sharding import points_spec, shard_points
         n_dev = len(jax.devices())
         mesh = jax.make_mesh((n_dev,), ("data",),
                              axis_types=(jax.sharding.AxisType.Auto,))
-        n = x.shape[0] // n_dev * n_dev        # truncate to shardable size
-        x = x[:n]
+        x, _ = shard_points(x, mesh)           # truncate to shardable size
         if algorithm == "kmeans":
             fit = shard_map(
                 functools.partial(core.kmeans_fit_earlystop,
                                   max_iters=max_iters, axis_name="data",
-                                  use_kernel=use_kernel, patience=patience),
-                mesh=mesh, in_specs=(P("data"), P(None, None), P()),
+                                  use_kernel=use_kernel, patience=patience,
+                                  chunks=chunks),
+                mesh=mesh, in_specs=(points_spec(mesh), P(None, None), P()),
                 out_specs=(P(None, None), P("data"), P(), P()),
                 check_vma=False)
             t0 = time.time()
@@ -88,9 +141,9 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
         fit = shard_map(
             functools.partial(em_gmm.em_fit_earlystop, max_iters=max_iters,
                               axis_name="data", use_kernel=use_kernel,
-                              patience=patience),
+                              patience=patience, chunks=chunks),
             mesh=mesh,
-            in_specs=(P("data"),
+            in_specs=(points_spec(mesh),
                       em_gmm.GMMParams(P(None, None), P(None, None), P(None)),
                       P()),
             out_specs=(em_gmm.GMMParams(P(None, None), P(None, None), P(None)),
@@ -101,18 +154,12 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
         jax.block_until_ready(labels)
         return labels, float(ll), int(iters), time.time() - t0
 
+    eng = ClusteringEngine(algorithm, cfg)
+    params0 = c0 if algorithm == "kmeans" else em_gmm.init_from_kmeans(x, c0)
     t0 = time.time()
-    if algorithm == "kmeans":
-        c, labels, j, iters = core.kmeans_fit_earlystop(
-            x, c0, h_star, max_iters=max_iters, use_kernel=use_kernel,
-            patience=patience)
-    else:
-        p0 = em_gmm.init_from_kmeans(x, c0)
-        p, labels, j, iters = em_gmm.em_fit_earlystop(
-            x, p0, h_star, max_iters=max_iters, use_kernel=use_kernel,
-            patience=patience)
-    jax.block_until_ready(labels)
-    return labels, float(j), int(iters), time.time() - t0
+    res = eng.fit(x, params0)
+    jax.block_until_ready(res.labels)
+    return res.labels, float(res.objective), int(res.n_iters), time.time() - t0
 
 
 def main():
@@ -130,6 +177,10 @@ def main():
     ap.add_argument("--family", default="quadratic",
                     help="'auto' runs the paper's model-selection comparison")
     ap.add_argument("--shard", action="store_true")
+    ap.add_argument("--chunks", type=int, default=1,
+                    help="stream each sweep over C chunks (engine mode)")
+    ap.add_argument("--restarts", type=int, default=1,
+                    help="vmapped multi-restart count; best objective wins")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route through the Pallas kernels (interpret on CPU)")
     ap.add_argument("--instance", default="m5.large")
@@ -162,12 +213,16 @@ def main():
     t_actual = t_full = 0.0
     accs, iters_es, iters_fu = [], [], []
     for gi, g in enumerate(prod_g):
+        # the fitted LongTailModel drives the threshold through EngineConfig
         labels, j, it1, t1 = run_production(
             g, args.k, args.algorithm, h_star, max_iters=args.max_iters,
-            seed=100 + gi, shard=args.shard, use_kernel=args.use_kernel)
+            seed=100 + gi, shard=args.shard, use_kernel=args.use_kernel,
+            chunks=args.chunks, restarts=args.restarts,
+            model=model, desired_accuracy=args.desired_accuracy)
         labels_f, j_f, it2, t2 = run_production(
             g, args.k, args.algorithm, 0.0, max_iters=args.max_iters * 3,
-            seed=100 + gi, shard=args.shard, use_kernel=args.use_kernel)
+            seed=100 + gi, shard=args.shard, use_kernel=args.use_kernel,
+            chunks=args.chunks)
         t_actual += t1
         t_full += t2
         accs.append(float(core.rand_index(labels[:labels_f.shape[0]],

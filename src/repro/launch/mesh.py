@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat  # noqa: F401  (AxisType / make_mesh shims)
+
 
 def _auto(n):
     return (jax.sharding.AxisType.Auto,) * n

@@ -74,6 +74,7 @@ def test_cache_specs_cover_long_context():
 _RING_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import repro.compat  # jax API shims (shard_map / make_mesh) first
     import jax, jax.numpy as jnp, numpy as np, functools
     from jax.sharding import PartitionSpec as P
     from jax import shard_map

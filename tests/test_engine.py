@@ -1,0 +1,213 @@
+"""ClusteringEngine: streaming-vs-monolithic parity, multi-restart vmap
+equivalence, chunked kernel entry points, LongTailModel config routing, and
+the kmeans_fit_full frozen-only stop (ISSUE 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import em_gmm
+from repro.core.engine import ClusteringEngine, EngineConfig
+
+K = 4
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    rng = np.random.default_rng(0)
+    centers = np.array([[0, 0, 0], [8, 8, 8], [-8, 8, 0], [8, -8, 4]], float)
+    x = np.concatenate([c + rng.normal(0, 1.0, (500, 3)) for c in centers])
+    return jnp.asarray(x.astype(np.float32))   # N=2000: 4 | N, 7 ∤ N
+
+
+@pytest.fixture(scope="module")
+def c0(blobs):
+    return core.kmeans_plus_plus_init(jax.random.PRNGKey(0), blobs, K)
+
+
+# --------------------------------------------------------------------------
+# Streaming parity — chunk counts that do and do not divide N
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunks", [1, 4, 7])
+def test_streaming_parity_kmeans(blobs, c0, chunks):
+    c_ref, l_ref, j_ref, it_ref = core.kmeans_fit_earlystop(
+        blobs, c0, 1e-4, max_iters=100)
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=100, chunks=chunks, use_h_stop=True, stop_when_frozen=True))
+    r = eng.fit(blobs, c0, h_star=1e-4)
+    assert int(r.n_iters) == int(it_ref)
+    np.testing.assert_allclose(r.params, c_ref, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(r.objective, j_ref, rtol=1e-5)
+    # chunked fp error may flip the odd boundary point, nothing more
+    assert float((r.labels == l_ref).mean()) > 0.999
+
+
+@pytest.mark.parametrize("chunks", [1, 4, 7])
+def test_streaming_parity_em(blobs, c0, chunks):
+    p0 = em_gmm.init_from_kmeans(blobs, c0)
+    p_ref, l_ref, ll_ref, it_ref = em_gmm.em_fit_earlystop(
+        blobs, p0, 1e-5, max_iters=100)
+    eng = ClusteringEngine("em", EngineConfig(max_iters=100, chunks=chunks))
+    r = eng.fit(blobs, p0, h_star=1e-5)
+    assert int(r.n_iters) == int(it_ref)
+    np.testing.assert_allclose(r.params.means, p_ref.means,
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(r.params.var, p_ref.var, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(r.objective, ll_ref, rtol=1e-5)
+    assert float((r.labels == l_ref).mean()) > 0.999
+
+
+def test_streaming_wrapper_kwarg_matches_engine(blobs, c0):
+    """The public drivers expose chunks= and agree with the engine."""
+    c_a, _, j_a, it_a = core.kmeans_fit_earlystop(blobs, c0, 1e-4,
+                                                  max_iters=100, chunks=5)
+    c_b, _, j_b, it_b = core.kmeans_fit_earlystop(blobs, c0, 1e-4,
+                                                  max_iters=100)
+    assert int(it_a) == int(it_b)
+    np.testing.assert_allclose(c_a, c_b, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(j_a, j_b, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Multi-restart vmap with per-restart stop masks
+# --------------------------------------------------------------------------
+
+def test_multirestart_kmeans_matches_sequential(blobs):
+    key = jax.random.PRNGKey(7)
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=60, use_h_stop=True, stop_when_frozen=True))
+    seq = [eng.fit(blobs, core.kmeans_plus_plus_init(kk, blobs, K),
+                   h_star=1e-4)
+           for kk in jax.random.split(key, 3)]
+    rr = eng.fit_restarts(blobs, key=key, k=K, restarts=3, h_star=1e-4)
+    # seed-for-seed: same iteration counts and objectives per restart
+    for i, s in enumerate(seq):
+        assert int(rr.n_iters[i]) == int(s.n_iters), i
+        np.testing.assert_allclose(rr.objectives[i], s.objective, rtol=1e-5)
+    best_seq = int(np.argmin([float(s.objective) for s in seq]))
+    assert int(rr.best_index) == best_seq
+    np.testing.assert_allclose(rr.best.params, seq[best_seq].params,
+                               rtol=1e-5, atol=1e-4)
+    assert float((rr.best.labels == seq[best_seq].labels).mean()) > 0.999
+
+
+def test_multirestart_em_matches_sequential(blobs):
+    key = jax.random.PRNGKey(11)
+    eng = ClusteringEngine("em", EngineConfig(max_iters=40))
+    seq = [eng.fit(blobs, em_gmm.random_init(kk, blobs, K), h_star=1e-4)
+           for kk in jax.random.split(key, 3)]
+    rr = eng.fit_restarts(blobs, key=key, k=K, restarts=3, h_star=1e-4)
+    for i, s in enumerate(seq):
+        assert int(rr.n_iters[i]) == int(s.n_iters), i
+        np.testing.assert_allclose(rr.objectives[i], s.objective,
+                                   rtol=1e-4)
+    best_seq = int(np.argmax([float(s.objective) for s in seq]))
+    assert int(rr.best_index) == best_seq   # EM: argmax loglik
+
+
+def test_multirestart_streaming_composes(blobs):
+    """Both scale axes at once: vmapped restarts over chunked sweeps."""
+    key = jax.random.PRNGKey(3)
+    mono = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=60, stop_when_frozen=True))
+    stream = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=60, chunks=7, stop_when_frozen=True))
+    a = mono.fit_restarts(blobs, key=key, k=K, restarts=2, h_star=1e-4)
+    b = stream.fit_restarts(blobs, key=key, k=K, restarts=2, h_star=1e-4)
+    assert int(a.best_index) == int(b.best_index)
+    np.testing.assert_array_equal(np.asarray(a.n_iters), np.asarray(b.n_iters))
+    np.testing.assert_allclose(a.objectives, b.objectives, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Chunked kernel entry points (fused contract, CPU interpret mode)
+# --------------------------------------------------------------------------
+
+def test_kmeans_assign_chunked_matches_monolithic(blobs, c0):
+    from repro.kernels.kmeans_assign.ops import (kmeans_assign,
+                                                 kmeans_assign_chunked)
+    x = blobs[:777]                                    # 3 ∤ 777 remainder
+    l1, s1, n1, j1 = kmeans_assign(x, c0)
+    l2, s2, n2, j2 = kmeans_assign_chunked(x, c0, chunks=3)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    np.testing.assert_allclose(s1, s2, rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(n1, n2, rtol=0)
+    np.testing.assert_allclose(j1, j2, rtol=1e-5)
+
+
+def test_gmm_estep_chunked_matches_monolithic(blobs, c0):
+    from repro.kernels.gmm_estep.ops import gmm_estep, gmm_estep_chunked
+    p = em_gmm.init_from_kmeans(blobs, c0)
+    x = blobs[:777]
+    o1 = gmm_estep(x, p.means, p.var, p.log_w)
+    o2 = gmm_estep_chunked(x, p.means, p.var, p.log_w, chunks=3)
+    np.testing.assert_array_equal(np.asarray(o1[0]), np.asarray(o2[0]))
+    np.testing.assert_allclose(o1[1], o2[1], rtol=1e-5)
+    for a, b in zip(o1[2:], o2[2:]):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-3)
+
+
+def test_engine_kernel_streaming_path(blobs, c0):
+    """use_kernel=True + chunks>1 routes through the chunked fused ops."""
+    x = blobs[:512]
+    ref = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=10, stop_when_frozen=True))
+    ker = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=10, chunks=4, use_kernel=True, stop_when_frozen=True))
+    a = ref.fit(x, c0, h_star=1e-4)
+    b = ker.fit(x, c0, h_star=1e-4)
+    assert int(a.n_iters) == int(b.n_iters)
+    np.testing.assert_allclose(a.params, b.params, rtol=1e-4, atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# LongTailModel → EngineConfig routing
+# --------------------------------------------------------------------------
+
+def test_config_from_longtail(blobs, c0):
+    res = core.kmeans_fit_traced(blobs, c0, max_iters=100)
+    r, h = core.trace_to_rh(res, K)
+    model = core.fit_longtail([(np.asarray(r), np.asarray(h))],
+                              algorithm="kmeans", dataset="blobs",
+                              family="quadratic")
+    cfg = EngineConfig.from_longtail(model, 0.95, max_iters=100,
+                                     stop_when_frozen=True)
+    assert cfg.h_star == pytest.approx(model.threshold_for(0.95))
+    eng = ClusteringEngine("kmeans", cfg)
+    out = eng.fit(blobs, c0)                  # threshold comes from config
+    _, _, _, it_ref = core.kmeans_fit_earlystop(
+        blobs, c0, model.threshold_for(0.95), max_iters=100)
+    assert int(out.n_iters) == int(it_ref)
+    acc = float(core.rand_index(out.labels, res["labels"], K, K))
+    assert acc >= 0.90
+
+
+# --------------------------------------------------------------------------
+# kmeans_fit_full: stop only when the centroids freeze (regression)
+# --------------------------------------------------------------------------
+
+def test_kmeans_full_runs_until_frozen():
+    """fp32 J plateaus bit-for-bit (ΔJ < ulp(J) with J ~ N·B²) while the
+    cluster boundary is still sweeping; the old h*=0/patience=1 stop quit on
+    the plateau and returned a non-fixed-point.  Pin the fix: fit_full must
+    land on a true Lloyd fixed point."""
+    b = 1e4
+    base = np.arange(40.0)
+    x = np.concatenate([np.stack([base, np.full(40, b)], 1),
+                        np.stack([base, np.full(40, -b)], 1)])
+    xj = jnp.asarray(x.astype(np.float32))
+    c0 = jnp.asarray([[0.0, 0.0], [1.0, 0.0]], jnp.float32)
+
+    # the plateau is real: the h-based path stops while centroids still move
+    c_h, _, _, it_h = core.kmeans_fit_earlystop(xj, c0, 0.0, max_iters=500)
+    c_h2, _, _ = core.kmeans_step(xj, c_h)
+    assert not bool(jnp.all(c_h2 == c_h)), \
+        "plateau scenario lost its teeth — rebuild the dataset"
+
+    c_f, _, _, it_f = core.kmeans_fit_full(xj, c0, max_iters=500)
+    c_f2, _, _ = core.kmeans_step(xj, c_f)
+    assert bool(jnp.all(c_f2 == c_f)), "fit_full returned a non-fixed-point"
+    assert int(it_f) > int(it_h)
+    assert int(it_f) < 500                    # still terminates by freezing

@@ -35,6 +35,7 @@ def test_parse_op_line_root_and_noise():
 _GEN = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import repro.compat  # jax API shims first
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 

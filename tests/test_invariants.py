@@ -1,0 +1,96 @@
+"""Property-based early-stop invariants (ISSUE 1): objective monotonicity,
+change-rate scale invariance, LongTailModel persistence round-trip.
+
+Runs under real hypothesis when installed, or under the seeded
+mini-hypothesis shim in conftest.py on a bare JAX install.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+from repro.core import em_gmm
+from repro.core.earlystop import change_rate
+
+
+def _blobs(seed: int, n: int, k: int, d: int = 3):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 6.0, (k, d))
+    x = np.concatenate([c + rng.normal(0, 1.0, (n // k, d)) for c in centers])
+    return jnp.asarray(x.astype(np.float32))
+
+
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 5))
+@settings(max_examples=8, deadline=None)
+def test_kmeans_objective_monotone_nonincreasing(seed, k):
+    x = _blobs(seed, 240, k)
+    c0 = core.random_init(jax.random.PRNGKey(seed), x, k)
+    res = core.kmeans_fit_traced(x, c0, max_iters=40)
+    js = np.asarray(res["objectives"], np.float64)
+    rel = np.diff(js) / np.maximum(np.abs(js[:-1]), 1e-9)
+    assert rel.max() <= 1e-5, \
+        f"k-means J increased by {rel.max():.2e} (seed={seed}, k={k})"
+
+
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 5))
+@settings(max_examples=8, deadline=None)
+def test_em_loglik_monotone_nondecreasing(seed, k):
+    x = _blobs(seed, 240, k)
+    p0 = em_gmm.random_init(jax.random.PRNGKey(seed), x, k)
+    res = em_gmm.em_fit_traced(x, p0, max_iters=30, tol=1e-12)
+    js = np.asarray(res["objectives"], np.float64)
+    rel = np.diff(js) / np.maximum(np.abs(js[:-1]), 1e-9)
+    assert rel.min() >= -1e-5, \
+        f"EM loglik decreased by {rel.min():.2e} (seed={seed}, k={k})"
+
+
+@given(alpha=st.floats(1e-3, 1e3),
+       j_prev=st.one_of(st.floats(-500.0, -0.5), st.floats(0.5, 500.0)),
+       delta=st.floats(-10.0, 10.0))
+@settings(max_examples=25, deadline=None)
+def test_change_rate_scale_invariant(alpha, j_prev, delta):
+    """h(αJ_i, αJ_{i-1}) == h(J_i, J_{i-1}): Eq. 7 is a *relative* rate, so
+    the fitted h* transfers across objective scales (dataset sizes).
+    Checked in f64 — in f32 the subtraction's cancellation noise would
+    drown the property itself."""
+    from jax.experimental import enable_x64
+    j_curr = j_prev + delta
+    with enable_x64():
+        h1 = float(change_rate(jnp.float64(j_curr), jnp.float64(j_prev)))
+        h2 = float(change_rate(jnp.float64(alpha * j_curr),
+                               jnp.float64(alpha * j_prev)))
+    assert h2 == pytest.approx(h1, rel=1e-9, abs=1e-15)
+
+
+@given(seed=st.integers(0, 99), a=st.floats(0.5, 3.0))
+@settings(max_examples=10, deadline=None)
+def test_longtail_model_json_roundtrip(seed, a):
+    rng = np.random.default_rng(seed)
+    r = rng.uniform(0.3, 1.0, 80)
+    h = a * (1.0 - r) ** 2 * (1 + rng.normal(0, 0.02, r.size))
+    m = core.fit_longtail([(r, np.abs(h))], algorithm="kmeans",
+                          dataset=f"synthetic-{seed}", family="quadratic")
+    m2 = core.LongTailModel.from_json(m.to_json())
+    assert m2.algorithm == m.algorithm
+    assert m2.dataset == m.dataset
+    assert m2.n_train_groups == m.n_train_groups
+    assert m2.regression.family == m.regression.family
+    np.testing.assert_allclose(m2.regression.coeffs, m.regression.coeffs,
+                               rtol=1e-12)
+    for acc in (0.9, 0.95, 0.99):
+        assert m2.threshold_for(acc) == pytest.approx(m.threshold_for(acc))
+
+
+def test_longtail_roundtrip_with_comparison_table():
+    """family=None stores the model-selection table; it must survive JSON."""
+    rng = np.random.default_rng(0)
+    r = rng.uniform(0.2, 1.0, 200)
+    h = 1.8 * (1 - r) ** 2 + np.abs(rng.normal(0, 1e-3, r.size))
+    m = core.fit_longtail([(r, h)], algorithm="em", dataset="synthetic",
+                          family=None)
+    m2 = core.LongTailModel.from_json(m.to_json())
+    assert m2.comparison is not None
+    assert set(m2.comparison) == set(m.comparison)
+    assert m2.threshold_for(0.99) == pytest.approx(m.threshold_for(0.99))
