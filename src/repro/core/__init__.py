@@ -11,9 +11,11 @@ from .earlystop import (LongTailModel, EarlyStopHook, fit_longtail,
                         change_rate, harvest_lm_trace)
 from .kmeans import (kmeans_step, kmeans_fit_traced, kmeans_fit_earlystop,
                      kmeans_fit_full, kmeans_plus_plus_init, random_init,
-                     assign_and_stats, trace_accuracy, trace_to_rh)
+                     assign_and_stats, trace_accuracy, trace_to_rh,
+                     chunk_points, minibatch_update_centroids)
 from .em_gmm import (GMMParams, em_step, em_fit_traced, em_fit_earlystop,
-                     em_fit_full, init_from_kmeans, estep_stats, log_prob)
+                     em_fit_full, init_from_kmeans, estep_stats, log_prob,
+                     minibatch_mstep)
 from .engine import (ClusteringEngine, EngineConfig, EngineResult,
                      RestartResult, KMeansAlgorithm, EMAlgorithm,
                      get_algorithm)

@@ -95,6 +95,42 @@ def mstep(params: GMMParams, r_sum, r_x, r_x2, n_total) -> GMMParams:
     return GMMParams(means=means, var=var, log_w=log_w)
 
 
+def minibatch_mstep(params: GMMParams, r_sum, r_x, r_x2, v, n_batch,
+                    decay: float = 1.0):
+    """Stepwise-EM M-step from subsampled responsibilities.
+
+    Mirrors the k-means minibatch rule (see
+    ``kmeans.minibatch_update_centroids``) with soft counts: ``v`` holds each
+    component's cumulative responsibility mass, and the batch estimates are
+    blended in with the per-component step size η_k = r_sum_k / v_k — the
+    Robbins-Monro 1/t schedule of stepwise EM (Cappé & Moulines 2009), here
+    annealed per component so rarely-responsible components are not dragged
+    by large global steps.  ``decay`` < 1 forgets old mass exponentially;
+    ``decay`` = 1 recovers the plain stochastic-approximation schedule.
+
+    Returns (new_params, new_v).  Components with (numerically) zero batch
+    responsibility keep their parameters, mirroring ``mstep``.
+    """
+    v_new = decay * v + r_sum
+    eta = (r_sum / jnp.maximum(v_new, 1e-10))[:, None]           # [K, 1]
+    safe = jnp.maximum(r_sum, 1e-10)[:, None]
+    mu_b = r_x / safe
+    var_b = jnp.maximum(r_x2 / safe - mu_b ** 2, VAR_FLOOR)
+    alive = (r_sum > 1e-8)[:, None]
+    means = jnp.where(alive, params.means + eta * (mu_b - params.means),
+                      params.means)
+    var = jnp.where(alive,
+                    jnp.maximum(params.var + eta * (var_b - params.var),
+                                VAR_FLOOR),
+                    params.var)
+    w_b = r_sum / jnp.maximum(n_batch, 1.0)                      # [K]
+    w = jnp.exp(params.log_w)
+    w = jnp.where(alive[:, 0], w + eta[:, 0] * (w_b - w), w)
+    w = w / jnp.maximum(jnp.sum(w), 1e-20)
+    return GMMParams(means=means, var=var,
+                     log_w=jnp.log(jnp.maximum(w, 1e-20))), v_new
+
+
 def em_step(x, params: GMMParams, n_total=None, axis_name=None,
             use_kernel: bool = False):
     """One EM iteration. Returns (new_params, labels, loglik)."""

@@ -21,6 +21,25 @@ This module folds them behind a small algorithm protocol
     becomes a no-op for it.  The engine returns the best-objective restart —
     the standard production guard against bad initialisation.
 
+  · **minibatch mode** — ``EngineConfig(mode="minibatch", chunks=C,
+    batch_chunks=B)`` makes every iteration sample B of the C chunks
+    (without replacement, fresh draw per step) and apply learning-rate
+    parameter updates: Sculley-style per-cluster counts for k-means,
+    stepwise-EM responsibility mass for GMMs (see
+    ``kmeans.minibatch_update_centroids`` / ``em_gmm.minibatch_mstep`` for
+    the 1/t schedules and the ``decay`` forgetting factor).  Per-iteration
+    data touch drops from N to N·B/C, which is the regime the paper's
+    cost argument needs at scales where even one full sweep is expensive.
+    The Eq. 7 change rate h is *paired*: the same subsample is evaluated
+    at the old and at the new parameters, so the sampling noise cancels in
+    the ratio and a full-batch fitted h* = f(r*) transfers to minibatch
+    stopping (raw cross-batch differences would floor h at the subsample
+    noise, ~1/√batch).  The pairing costs a second distance pass over the
+    subsample — 2·B/C of a full sweep's compute, still B/C distinct data.
+    ``patience`` > 1 still robustifies against lucky draws, and ``ema``
+    optionally smooths h.  The final labels pass is always a full sweep,
+    so the result contract is unchanged.
+
 Thresholds from an offline-fitted ``earlystop.LongTailModel`` enter through
 ``EngineConfig.from_longtail`` so the paper pipeline (fit h(r) once, reuse
 h* = f(r*) forever) drives the same engine.
@@ -58,13 +77,22 @@ class KMeansAlgorithm:
     def __eq__(self, other):
         return type(other) is type(self)
 
-    def init(self, key, x, k: int):
-        return _km.kmeans_plus_plus_init(key, x, k)
+    def init(self, key, x, k: int, chunks: int = 1):
+        return _km.kmeans_plus_plus_init(key, x, k, chunks=chunks)
 
     def zero_stats(self, params):
         k, d = params.shape
         return (jnp.zeros((k, d), jnp.float32), jnp.zeros((k,), jnp.float32),
                 jnp.zeros((), jnp.float32))
+
+    def zero_carry(self, params):
+        """Minibatch carry: cumulative per-cluster counts v [K]."""
+        return jnp.zeros((params.shape[0],), jnp.float32)
+
+    def minibatch_update(self, params, stats, carry, n_batch, decay):
+        sums, counts, _ = stats
+        return _km.minibatch_update_centroids(params, sums, counts, carry,
+                                              decay)
 
     def chunk_stats(self, xc, mask, params):
         labels, sums, counts, j = _km.assign_and_stats(xc, params, mask=mask)
@@ -100,13 +128,23 @@ class EMAlgorithm:
     def __eq__(self, other):
         return type(other) is type(self)
 
-    def init(self, key, x, k: int):
+    def init(self, key, x, k: int, chunks: int = 1):
+        del chunks  # uniform draw touches k rows, nothing to stream
         return _em.random_init(key, x, k)
 
     def zero_stats(self, params):
         k, d = params.means.shape
         return (jnp.zeros((k,), jnp.float32), jnp.zeros((k, d), jnp.float32),
                 jnp.zeros((k, d), jnp.float32), jnp.zeros((), jnp.float32))
+
+    def zero_carry(self, params):
+        """Minibatch carry: cumulative responsibility mass v [K]."""
+        return jnp.zeros((params.means.shape[0],), jnp.float32)
+
+    def minibatch_update(self, params, stats, carry, n_batch, decay):
+        r_sum, r_x, r_x2, _ = stats
+        return _em.minibatch_mstep(params, r_sum, r_x, r_x2, carry, n_batch,
+                                   decay)
 
     def chunk_stats(self, xc, mask, params):
         labels, loglik, r_sum, r_x, r_x2 = _em.estep_stats(
@@ -153,6 +191,13 @@ class EngineConfig:
 
     ``h_star`` here is the *default* threshold; ``fit`` accepts a traced
     override so sweeping thresholds does not retrace.
+
+    ``mode="minibatch"`` samples ``batch_chunks`` of the ``chunks`` pieces
+    per iteration and applies learning-rate updates with forgetting factor
+    ``decay`` (1.0 = pure 1/t annealing; see the module docstring).  The
+    chunk draw is seeded from ``seed`` so runs are reproducible; under
+    ``axis_name`` every shard draws the same chunk indices from its local
+    chunking and the psum'd stats keep the stop decision globally agreed.
     """
     max_iters: int = 300
     h_star: float = 0.0
@@ -162,6 +207,34 @@ class EngineConfig:
     use_kernel: bool = False        # route sweeps through the Pallas kernels
     use_h_stop: bool = True         # apply the h_i <= h* long-tail predicate
     stop_when_frozen: bool = False  # stop when params stop moving (k-means)
+    mode: str = "full"              # "full" | "minibatch"
+    batch_chunks: int = 0           # B of C chunks sampled per minibatch step
+    decay: float = 1.0              # minibatch count forgetting factor
+    seed: int = 0                   # minibatch chunk-sampling PRNG stream
+    ema: float = 0.0                # minibatch h smoothing (0 = raw)
+
+    def __post_init__(self):
+        if self.mode not in ("full", "minibatch"):
+            raise ValueError(f"unknown engine mode {self.mode!r}")
+        if not 0.0 <= self.ema < 1.0:
+            raise ValueError(f"ema must be in [0, 1); got {self.ema}")
+        if self.mode == "minibatch":
+            if self.chunks < 2:
+                raise ValueError(
+                    "minibatch mode needs chunks >= 2 (the sweep samples "
+                    "batch_chunks of them); got chunks="
+                    f"{self.chunks}")
+            if not 1 <= self.batch_chunks < self.chunks:
+                raise ValueError(
+                    "minibatch mode needs 1 <= batch_chunks < chunks; got "
+                    f"batch_chunks={self.batch_chunks}, chunks={self.chunks}")
+            if self.use_kernel:
+                raise NotImplementedError(
+                    "minibatch mode gathers a traced chunk subset; the "
+                    "Pallas chunked entry points need static slices — "
+                    "use use_kernel=False with mode='minibatch'")
+            if not 0.0 < self.decay <= 1.0:
+                raise ValueError(f"decay must be in (0, 1]; got {self.decay}")
 
     @classmethod
     def from_longtail(cls, model, desired_accuracy: float, **kw):
@@ -188,15 +261,8 @@ class RestartResult(NamedTuple):
 # Streaming sweep
 # --------------------------------------------------------------------------
 
-def _chunk_points(x, chunks: int):
-    """[N, D] → ([C, ceil(N/C), D], mask [C, ceil(N/C)]) with zero-padding."""
-    n, d = x.shape
-    c = max(1, min(int(chunks), n))
-    per = -(-n // c)
-    pad = c * per - n
-    xp = jnp.pad(x, ((0, pad), (0, 0)))
-    mask = (jnp.arange(c * per) < n).astype(jnp.float32).reshape(c, per)
-    return xp.reshape(c, per, d), mask
+# one chunk layout for everything: full sweeps, minibatch draws, ++ init
+_chunk_points = _km.chunk_points
 
 
 def _sweep(alg, config: EngineConfig, x, params, with_labels: bool):
@@ -233,6 +299,49 @@ def _sweep(alg, config: EngineConfig, x, params, with_labels: bool):
     return labels, stats
 
 
+def _minibatch_draw(config: EngineConfig, xc, mask, key):
+    """Draw B-of-C chunks without replacement → (xb [B,P,D], mb [B,P]).
+
+    Separated from the stats pass so the paired Eq. 7 evaluation reuses the
+    SAME gathered batch structurally (one gather per iteration), rather than
+    leaning on PRNG determinism + XLA CSE to dedup a second draw.
+    """
+    if mask.shape[0] <= config.batch_chunks:
+        # chunk_points clamps C to the row count; fail with the engine's
+        # message rather than choice()'s opaque replace=False trace error
+        raise ValueError(
+            f"minibatch mode needs batch_chunks < effective chunks, but "
+            f"the data only splits into {mask.shape[0]} chunk(s) "
+            f"(batch_chunks={config.batch_chunks}, chunks={config.chunks}); "
+            "reduce batch_chunks or use mode='full' at this scale")
+    idx = jax.random.choice(key, mask.shape[0],
+                            shape=(config.batch_chunks,), replace=False)
+    return xc[idx], mask[idx]
+
+
+def _minibatch_stats(alg, config: EngineConfig, xb, mb, params):
+    """Masked ``chunk_stats`` scan over a drawn batch → (stats, n_batch) —
+    the same accumulation as the full sweep, over N·B/C points only."""
+    def body(acc, inp):
+        xi, mi = inp
+        _, st = alg.chunk_stats(xi, mi, params)
+        return jax.tree.map(jnp.add, acc, st), None
+
+    stats, _ = jax.lax.scan(body, alg.zero_stats(params), (xb, mb))
+    n_batch = jnp.sum(mb)
+    if config.axis_name is not None:
+        stats = jax.tree.map(
+            lambda a: jax.lax.psum(a, config.axis_name), stats)
+        n_batch = jax.lax.psum(n_batch, config.axis_name)
+    return stats, n_batch
+
+
+def _minibatch_sweep(alg, config: EngineConfig, xc, mask, params, key):
+    """draw + stats in one call (kept for tests / external callers)."""
+    xb, mb = _minibatch_draw(config, xc, mask, key)
+    return _minibatch_stats(alg, config, xb, mb, params)
+
+
 def _global_n(x, config: EngineConfig):
     n = jnp.asarray(x.shape[0], jnp.float32)
     if config.axis_name is not None:
@@ -251,6 +360,8 @@ class _State(NamedTuple):
     hits: jnp.ndarray
     iteration: jnp.ndarray
     moved: jnp.ndarray
+    key: jnp.ndarray            # minibatch chunk-sampling stream
+    carry: Any                  # minibatch step-size state (v counts)
 
 
 def _live(config: EngineConfig, iteration, hits, moved):
@@ -268,31 +379,63 @@ def _live(config: EngineConfig, iteration, hits, moved):
 def _fit(x, params0, h_star, alg, config: EngineConfig):
     x = x.astype(jnp.float32)
     n_total = _global_n(x, config)
+    params0 = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0)
+    minibatch = config.mode == "minibatch"
+    xc, mask = _chunk_points(x, config.chunks) if minibatch else (None, None)
     init = _State(
-        params=jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0),
+        params=params0,
         j_curr=jnp.asarray(jnp.inf, jnp.float32),
         h=jnp.asarray(jnp.inf, jnp.float32),
         hits=jnp.asarray(0, jnp.int32),
         iteration=jnp.asarray(0, jnp.int32),
         moved=jnp.asarray(True),
+        key=jax.random.PRNGKey(config.seed),
+        carry=alg.zero_carry(params0) if minibatch else (),
     )
 
     def cond(s: _State):
         return _live(config, s.iteration, s.hits, s.moved)
 
     def body(s: _State):
-        _, stats = _sweep(alg, config, x, s.params, with_labels=False)
-        j = alg.objective(stats)
-        new_params = alg.update(s.params, stats, n_total)
-        h = jnp.where(
-            jnp.isfinite(s.j_curr),
-            jnp.abs(j - s.j_curr) / jnp.maximum(jnp.abs(s.j_curr), _EPS),
-            jnp.asarray(jnp.inf, jnp.float32))
+        if minibatch:
+            key, sub = jax.random.split(s.key)
+            xb, mb = _minibatch_draw(config, xc, mask, sub)
+            stats, n_batch = _minibatch_stats(alg, config, xb, mb, s.params)
+            j_old = alg.objective(stats) / jnp.maximum(n_batch, 1.0)
+            new_params, carry = alg.minibatch_update(
+                s.params, stats, s.carry, n_batch, config.decay)
+            # paired h (Eq. 7 on the SAME subsample, old vs new params):
+            # raw cross-batch differences floor h at the subsampling noise,
+            # while the paired ratio's sample noise cancels — so full-batch
+            # fitted h* thresholds transfer to minibatch stopping.  Skipped
+            # when the h predicate is off (the pairing is a second distance
+            # pass; don't pay it for a value nothing reads).
+            if config.use_h_stop:
+                stats2, _ = _minibatch_stats(alg, config, xb, mb,
+                                             new_params)
+                j = alg.objective(stats2) / jnp.maximum(n_batch, 1.0)
+                h = jnp.abs(j - j_old) / jnp.maximum(jnp.abs(j_old), _EPS)
+                h = jnp.where(jnp.isfinite(s.h),
+                              config.ema * s.h + (1.0 - config.ema) * h, h)
+            else:
+                j, h = j_old, s.h
+        else:
+            _, stats = _sweep(alg, config, x, s.params, with_labels=False)
+            j = alg.objective(stats)
+            new_params = alg.update(s.params, stats, n_total)
+            key, carry = s.key, s.carry
+            h = jnp.where(
+                jnp.isfinite(s.j_curr),
+                jnp.abs(j - s.j_curr) / jnp.maximum(jnp.abs(s.j_curr), _EPS),
+                jnp.asarray(jnp.inf, jnp.float32))
         hits = jnp.where(h <= h_star, s.hits + 1, 0)
         moved = alg.moved(new_params, s.params)
-        return _State(new_params, j, h, hits, s.iteration + 1, moved)
+        return _State(new_params, j, h, hits, s.iteration + 1, moved,
+                      key, carry)
 
     final = jax.lax.while_loop(cond, body, init)
+    # the labels pass is always a full sweep — minibatch only changes how
+    # the parameters got there, not the result contract
     labels, stats = _sweep(alg, config, x, final.params, with_labels=True)
     return EngineResult(final.params, labels, alg.objective(stats),
                         final.iteration, final.h)
@@ -320,6 +463,8 @@ class _BatchState(NamedTuple):
     n_iters: jnp.ndarray        # [R] int32
     moved: jnp.ndarray          # [R] bool
     active: jnp.ndarray         # [R] bool — restart still iterating
+    keys: jnp.ndarray           # [R, 2] per-restart minibatch streams
+    carry: Any                  # [R, ...] minibatch step-size state
 
 
 def _mask_tree(active, new, old):
@@ -335,11 +480,21 @@ def _fit_restarts(x, params0, h_star, alg, config: EngineConfig):
     x = x.astype(jnp.float32)
     n_total = _global_n(x, config)
     r = jax.tree.leaves(params0)[0].shape[0]
+    params0 = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0)
+    minibatch = config.mode == "minibatch"
+    xc, mask = _chunk_points(x, config.chunks) if minibatch else (None, None)
 
     sweep_stats = jax.vmap(
         lambda p: _sweep(alg, config, x, p, with_labels=False)[1])
     sweep_labels = jax.vmap(
         lambda p: _sweep(alg, config, x, p, with_labels=True))
+    mb_draw_v = jax.vmap(
+        lambda kk: _minibatch_draw(config, xc, mask, kk))
+    mb_stats_v = jax.vmap(
+        lambda xb, mb, p: _minibatch_stats(alg, config, xb, mb, p))
+    mb_update_v = jax.vmap(
+        lambda p, st, cv, nb: alg.minibatch_update(p, st, cv, nb,
+                                                   config.decay))
     update_v = jax.vmap(alg.update, in_axes=(0, 0, None))
     objective_v = jax.vmap(alg.objective)
     moved_v = jax.vmap(alg.moved)
@@ -348,9 +503,12 @@ def _fit_restarts(x, params0, h_star, alg, config: EngineConfig):
     zeros_i = jnp.zeros((r,), jnp.int32)
     true_b = jnp.ones((r,), bool)
     init = _BatchState(
-        params=jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0),
+        params=params0,
         j_curr=inf, h=inf, hits=zeros_i, n_iters=zeros_i,
         moved=true_b, active=_live(config, zeros_i, zeros_i, true_b),
+        keys=jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            jax.random.PRNGKey(config.seed), jnp.arange(r)),
+        carry=(jax.vmap(alg.zero_carry)(params0) if minibatch else ()),
     )
 
     def cond(s: _BatchState):
@@ -359,13 +517,33 @@ def _fit_restarts(x, params0, h_star, alg, config: EngineConfig):
     def body(s: _BatchState):
         # every restart computes; stopped restarts are masked back to their
         # frozen state (the "no-op body" — XLA keeps one batched program)
-        stats = sweep_stats(s.params)
-        j = objective_v(stats)
-        new_params = update_v(s.params, stats, n_total)
-        h = jnp.where(
-            jnp.isfinite(s.j_curr),
-            jnp.abs(j - s.j_curr) / jnp.maximum(jnp.abs(s.j_curr), _EPS),
-            jnp.inf).astype(jnp.float32)
+        if minibatch:
+            split = jax.vmap(jax.random.split)(s.keys)      # [R, 2, 2]
+            keys, subs = split[:, 0], split[:, 1]
+            xb, mb = mb_draw_v(subs)                        # [R, B, P, ...]
+            stats, n_batch = mb_stats_v(xb, mb, s.params)
+            j_old = objective_v(stats) / jnp.maximum(n_batch, 1.0)
+            new_params, carry = mb_update_v(s.params, stats, s.carry,
+                                            n_batch)
+            # paired h on the same per-restart subsample (see _fit)
+            if config.use_h_stop:
+                stats2, _ = mb_stats_v(xb, mb, new_params)
+                j = objective_v(stats2) / jnp.maximum(n_batch, 1.0)
+                h = (jnp.abs(j - j_old)
+                     / jnp.maximum(jnp.abs(j_old), _EPS)).astype(jnp.float32)
+                h = jnp.where(jnp.isfinite(s.h),
+                              config.ema * s.h + (1.0 - config.ema) * h, h)
+            else:
+                j, h = j_old, s.h
+        else:
+            stats = sweep_stats(s.params)
+            j = objective_v(stats)
+            new_params = update_v(s.params, stats, n_total)
+            keys, carry = s.keys, s.carry
+            h = jnp.where(
+                jnp.isfinite(s.j_curr),
+                jnp.abs(j - s.j_curr) / jnp.maximum(jnp.abs(s.j_curr), _EPS),
+                jnp.inf).astype(jnp.float32)
         hits = jnp.where(h <= h_star, s.hits + 1, 0)
         moved = moved_v(new_params, s.params)
         a = s.active
@@ -377,8 +555,9 @@ def _fit_restarts(x, params0, h_star, alg, config: EngineConfig):
         moved_out = jnp.where(a, moved, s.moved)
         active = jnp.logical_and(
             a, _live(config, n_iters, hits_out, moved_out))
+        carry_out = _mask_tree(a, carry, s.carry) if minibatch else carry
         return _BatchState(params, j_curr, h_out, hits_out, n_iters,
-                           moved_out, active)
+                           moved_out, active, keys, carry_out)
 
     final = jax.lax.while_loop(cond, body, init)
     labels, stats = sweep_labels(final.params)
@@ -407,6 +586,10 @@ class ClusteringEngine:
     ...                                               stop_when_frozen=True))
     >>> res = eng.fit(x, eng.init(key, x, k=8), h_star=1e-4)
     >>> best = eng.fit_restarts(x, key=key, k=8, restarts=4).best
+    >>> mb = ClusteringEngine("kmeans", EngineConfig(
+    ...     mode="minibatch", chunks=64, batch_chunks=16, patience=5,
+    ...     max_iters=200))                 # touch 25% of the points per step
+    >>> res = mb.fit(x, mb.init(key, x, k=8), h_star=1e-3)
     """
 
     def __init__(self, algorithm="kmeans", config: EngineConfig | None = None):
@@ -415,13 +598,17 @@ class ClusteringEngine:
 
     # -- initialisation ----------------------------------------------------
     def init(self, key, x, k: int):
-        return self.algorithm.init(key, jnp.asarray(x), k)
+        """Seed params; k-means++ D² sampling streams over ``config.chunks``
+        so init honours the same memory envelope as the sweeps."""
+        return self.algorithm.init(key, jnp.asarray(x), k,
+                                   chunks=self.config.chunks)
 
     def init_restarts(self, key, x, k: int, restarts: int):
         """R independent seeds, stacked along a leading restart axis."""
         x = jnp.asarray(x)
         keys = jax.random.split(key, restarts)
-        inits = [self.algorithm.init(kk, x, k) for kk in keys]
+        inits = [self.algorithm.init(kk, x, k, chunks=self.config.chunks)
+                 for kk in keys]
         return jax.tree.map(lambda *leaves: jnp.stack(leaves), *inits)
 
     # -- drivers -----------------------------------------------------------
@@ -446,8 +633,11 @@ class ClusteringEngine:
             params0 = self.init_restarts(key, x, k, restarts)
         if self.config.use_kernel:
             raise NotImplementedError(
-                "multi-restart vmap over the Pallas kernels is not wired up; "
-                "use use_kernel=False for fit_restarts")
+                "fit_restarts(use_kernel=True): the Pallas kmeans_assign/"
+                "gmm_estep kernels have no vmap batching rule yet, so the "
+                "vmapped multi-restart program cannot route through them; "
+                "use use_kernel=False for fit_restarts (single-restart "
+                "fit() still takes the kernel path)")
         hs = self.config.h_star if h_star is None else h_star
         return _fit_restarts(x, params0, jnp.asarray(hs, jnp.float32),
                              self.algorithm, self.config)

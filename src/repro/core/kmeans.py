@@ -74,10 +74,53 @@ def update_centroids(centroids, sums, counts):
     return jnp.where(counts[:, None] > 0, new, centroids)
 
 
+def minibatch_update_centroids(centroids, sums, counts, v, decay: float = 1.0):
+    """Per-cluster learning-rate update (Sculley 2010, web-scale k-means).
+
+    ``v`` accumulates how many points each cluster has ever absorbed; the
+    batched form of the per-point rule c ← (1−1/v)c + (1/v)x is
+
+        v_k ← decay·v_k + n_k        (n_k = batch count for cluster k)
+        c_k ← c_k + (n_k / v_k) · (mean_batch_k − c_k)
+
+    so the step size 1/v_k anneals like 1/t and the centroids converge even
+    though every iteration only sees a subsample.  ``decay`` < 1 adds
+    exponential forgetting (the step size no longer vanishes — useful for
+    drifting streams); ``decay`` = 1 is Sculley's schedule exactly.  The
+    first batch a cluster sees has n_k = v_k, i.e. a full Lloyd step.
+
+    Returns (new_centroids, new_v); clusters with no batch members keep both.
+    """
+    v_new = decay * v + counts
+    eta = counts / jnp.maximum(v_new, 1.0)
+    target = sums / jnp.maximum(counts, 1.0)[:, None]
+    new = centroids + eta[:, None] * (target - centroids)
+    return jnp.where(counts[:, None] > 0, new, centroids), v_new
+
+
 def kmeans_step(x, centroids, axis_name=None, use_kernel: bool = False):
     """One Lloyd iteration. Returns (new_centroids, labels, j)."""
     labels, sums, counts, j = assign_and_stats(x, centroids, axis_name, use_kernel)
     return update_centroids(centroids, sums, counts), labels, j
+
+
+# --------------------------------------------------------------------------
+# Chunk layout (shared by the engine's streaming sweep and the ++ init)
+# --------------------------------------------------------------------------
+
+def chunk_points(x, chunks: int):
+    """[N, D] → ([C, ceil(N/C), D], mask [C, ceil(N/C)]) with zero-padding.
+
+    Row-major: global row i lives at chunk i // per, slot i % per.  The mask
+    is 1.0 for real rows, 0.0 for padding.
+    """
+    n, d = x.shape
+    c = max(1, min(int(chunks), n))
+    per = -(-n // c)
+    pad = c * per - n
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    mask = (jnp.arange(c * per) < n).astype(jnp.float32).reshape(c, per)
+    return xp.reshape(c, per, d), mask
 
 
 # --------------------------------------------------------------------------
@@ -90,24 +133,61 @@ def random_init(key, x, k: int):
     return x[idx].astype(jnp.float32)
 
 
-def kmeans_plus_plus_init(key, x, k: int):
-    """k-means++ seeding (D² sampling) — fori_loop, O(k·N·D)."""
+def _min_d2_scan(xc, mask, c, d2):
+    """d2 ← min(d2, ‖x − c‖²) streamed chunk-by-chunk ([C, P] in, [C, P] out).
+
+    Padded rows stay pinned at 0 so they carry no sampling mass; the [P, D]
+    difference tensor exists for one chunk at a time only.
+    """
+    def body(_, inp):
+        xi, mi, d2i = inp
+        diff = xi - c[None, :]
+        nd = jnp.minimum(d2i, jnp.sum(diff * diff, axis=-1))
+        return None, jnp.where(mi > 0, nd, 0.0)
+
+    _, out = jax.lax.scan(body, None, (xc, mask, d2))
+    return out
+
+
+def kmeans_plus_plus_init(key, x, k: int, chunks: int = 1):
+    """k-means++ seeding (D² sampling), streamed over ``chunks`` pieces.
+
+    The running min-distance table lives as [C, P] alongside the [C, P, D]
+    chunk layout from :func:`chunk_points`; each of the k−1 D² draws is the
+    exact hierarchical factorisation of the flat categorical —  pick a chunk
+    with probability ∝ its d² mass, then a row within it ∝ d² — so the
+    distribution is identical for every chunking, and the per-step temporary
+    is one chunk's [P, D] difference, never a resident [N, D] (or any [N, K])
+    intermediate.  The key schedule matches the historical monolithic
+    implementation (one split per draw; the chunk pick uses a ``fold_in`` of
+    the same sub-key and is deterministic when C = 1), so ``chunks=1``
+    reproduces the flat pass bit-for-bit (property-tested) and existing
+    seeds are unchanged.
+    """
     x = x.astype(jnp.float32)
     n = x.shape[0]
+    xc, mask = chunk_points(x, chunks)
+    n_chunks, per = mask.shape
+
     key, sub = jax.random.split(key)
-    first = x[jax.random.randint(sub, (), 0, n)]
+    flat = jax.random.randint(sub, (), 0, n)
+    first = xc[flat // per, flat % per]
     centroids = jnp.zeros((k, x.shape[1]), jnp.float32).at[0].set(first)
-    d2 = jnp.sum((x - first) ** 2, axis=-1)
+    d2 = _min_d2_scan(xc, mask, first,
+                      jnp.where(mask > 0, jnp.inf, 0.0))
 
     def body(i, carry):
         centroids, d2, key = carry
         key, sub = jax.random.split(key)
-        probs = d2 / jnp.maximum(jnp.sum(d2), 1e-30)
-        idx = jax.random.choice(sub, n, p=probs)
-        c = x[idx]
+        w = jnp.sum(d2, axis=1)                                  # [C] mass
+        ci = jax.random.choice(jax.random.fold_in(sub, 1), n_chunks,
+                               p=w / jnp.maximum(jnp.sum(w), 1e-30))
+        row = d2[ci]
+        ri = jax.random.choice(sub, per,
+                               p=row / jnp.maximum(jnp.sum(row), 1e-30))
+        c = xc[ci, ri]
         centroids = centroids.at[i].set(c)
-        d2 = jnp.minimum(d2, jnp.sum((x - c) ** 2, axis=-1))
-        return centroids, d2, key
+        return centroids, _min_d2_scan(xc, mask, c, d2), key
 
     centroids, _, _ = jax.lax.fori_loop(1, k, body, (centroids, d2, key))
     return centroids

@@ -127,7 +127,13 @@ def param_shardings(params_struct, mesh: Mesh, *, fsdp: bool = True):
 
 def points_spec(mesh: Mesh) -> P:
     """[N, D] clustering points: N over the data axes, D replicated — the
-    layout the engine's per-sweep psum of [K,D]+[K]+[1] stats assumes."""
+    layout the engine's per-sweep psum of [K,D]+[K]+[1] stats assumes.
+
+    Minibatch mode composes with this layout shard-locally: every shard
+    chunks its resident rows, draws the same B chunk *indices* (the sampling
+    key is replicated), and the engine psums the subsample's stats plus its
+    point count, so the paired Eq. 7 stop decision stays globally agreed.
+    """
     dp, _, _ = mesh_axes(mesh)
     return P(dp if dp else None, None)
 

@@ -1,14 +1,25 @@
-"""Test substrate shim: make ``hypothesis`` optional.
+"""Test substrate: in-process multi-device session + optional hypothesis.
 
-The property-based suites (test_kernels, test_rand_index, test_regression,
-test_earlystop_and_cost, test_invariants) are written against the real
-hypothesis API.  On a bare JAX install this conftest registers a minimal,
-deterministic stand-in *before collection*: ``@given`` becomes a seeded
-random sweep of ``max_examples`` draws (no shrinking, fixed seed), which
-keeps every property executed — just with fewer, reproducible examples.
+**Multi-device.** The whole test session runs with 8 XLA host-platform
+devices: the flag is appended to ``XLA_FLAGS`` below, *before* anything can
+import jax (pytest loads conftest first; the backend reads the flag at its
+lazy first initialisation).  The session-scoped ``mesh8`` fixture hands
+tests a real 8-device ``("d",)`` mesh, so multi-device paths (shard_map
+collectives, GSPMD lowering, sharded restore) run in-process instead of
+behind ``subprocess.run`` — same coverage, one process, debuggable.  An
+externally-set device-count flag wins (that is how CI pins the single- and
+multi-device legs); tests needing the mesh skip when fewer than 8 devices
+exist.  Single-device numerics are unchanged: computations still place onto
+device 0 unless a test shards them explicitly.
 
-Install ``requirements-dev.txt`` to run the full hypothesis engine instead;
-this module then does nothing.
+**Hypothesis is optional.** The property-based suites (test_kernels,
+test_rand_index, test_regression, test_earlystop_and_cost, test_invariants)
+are written against the real hypothesis API.  On a bare JAX install this
+conftest registers a minimal, deterministic stand-in *before collection*:
+``@given`` becomes a seeded random sweep of ``max_examples`` draws (no
+shrinking, fixed seed), which keeps every property executed — just with
+fewer, reproducible examples.  Install ``requirements-dev.txt`` to run the
+full hypothesis engine instead; this module then does nothing.
 
 In the same spirit, importing ``repro.compat`` first installs jax
 forward-compat shims (jax.shard_map / AxisType / make_mesh(axis_types=))
@@ -18,11 +29,32 @@ from __future__ import annotations
 
 import functools
 import inspect
+import os
 import random
 import sys
 import types
 
-import repro.compat  # noqa: F401  (jax API shims; must precede test imports)
+_DEVCOUNT_FLAG = "--xla_force_host_platform_device_count"
+# stash what the user actually set, so tests that spawn CLI subprocesses
+# (the test_system smoke tests) can hand them the stock environment
+ORIG_XLA_FLAGS = os.environ.get("XLA_FLAGS", "")
+if _DEVCOUNT_FLAG not in ORIG_XLA_FLAGS:
+    os.environ["XLA_FLAGS"] = (ORIG_XLA_FLAGS + f" {_DEVCOUNT_FLAG}=8").strip()
+
+import repro.compat  # noqa: F401,E402  (jax API shims; must precede test imports)
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    """A real 8-device ("d",) mesh on the host platform, in-process."""
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 devices "
+                    f"(XLA_FLAGS {_DEVCOUNT_FLAG}=8; "
+                    f"have {jax.device_count()})")
+    return jax.make_mesh((8,), ("d",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
 
 try:  # real hypothesis wins whenever it is available
     import hypothesis  # noqa: F401

@@ -1,7 +1,6 @@
-"""Sharding rules + int8 ring all-reduce (multi-device via subprocess)."""
-import subprocess
-import sys
-import textwrap
+"""Sharding rules + int8 ring all-reduce (in-process 8-device mesh)."""
+import functools
+import re
 
 import jax
 import numpy as np
@@ -71,22 +70,19 @@ def test_cache_specs_cover_long_context():
         == jax.tree.structure(specs, is_leaf=lambda x: hasattr(x, "shape"))
 
 
-_RING_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import repro.compat  # jax API shims (shard_map / make_mesh) first
-    import jax, jax.numpy as jnp, numpy as np, functools
+def test_ring_allreduce_int8(mesh8):
+    """Numerics + int8 wire format, on the in-process 8-device mesh
+    (conftest sets the host-platform device count for the whole session)."""
+    import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from jax import shard_map
     from repro.distribution.compression import ring_allreduce_int8
 
-    mesh = jax.make_mesh((8,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
     x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (8, 1000))
                     .astype(np.float32))
     f = shard_map(functools.partial(ring_allreduce_int8, axis_name="d",
                                     axis_size=8),
-                  mesh=mesh, in_specs=P("d"), out_specs=P("d"),
+                  mesh=mesh8, in_specs=P("d"), out_specs=P("d"),
                   check_vma=False)
     out = f(x)
     ref = jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape)
@@ -97,24 +93,11 @@ _RING_SCRIPT = textwrap.dedent("""
     # wire ops are int8: check the HLO
     hlo = jax.jit(f).lower(x).compile().as_text()
     assert "collective-permute" in hlo
-    import re
-    perms = re.findall(r"(s8|s32|f32)\\[[^\\]]*\\][^=]*collective-permute",
+    perms = re.findall(r"(s8|s32|f32)\[[^\]]*\][^=]*collective-permute",
                        hlo) or re.findall(
-                       r"= \\(?(s8|s32|f32)\\[[^\\]]*\\].*collective-permute",
+                       r"= \(?(s8|s32|f32)\[[^\]]*\].*collective-permute",
                        hlo)
     assert "s8" in perms, perms
-    print("RING_OK", err)
-""")
-
-
-def test_ring_allreduce_int8_subprocess():
-    """Numerics + int8 wire format, on 8 host devices (fresh process so the
-    main test session keeps its single-device view)."""
-    r = subprocess.run([sys.executable, "-c", _RING_SCRIPT],
-                       capture_output=True, text=True, timeout=300,
-                       env={**__import__("os").environ,
-                            "PYTHONPATH": "src"}, cwd="/root/repo")
-    assert "RING_OK" in r.stdout, r.stdout + r.stderr
 
 
 def test_activation_rules_cover_known_names():

@@ -1,6 +1,9 @@
 """ClusteringEngine: streaming-vs-monolithic parity, multi-restart vmap
-equivalence, chunked kernel entry points, LongTailModel config routing, and
-the kmeans_fit_full frozen-only stop (ISSUE 1)."""
+equivalence, chunked kernel entry points, LongTailModel config routing,
+the kmeans_fit_full frozen-only stop (ISSUE 1), and minibatch mode
+(ISSUE 2): tolerance parity with full-batch, the full-mode bit-identical
+regression guard, config validation, and the loud fit_restarts kernel
+error."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -182,6 +185,152 @@ def test_config_from_longtail(blobs, c0):
     assert int(out.n_iters) == int(it_ref)
     acc = float(core.rand_index(out.labels, res["labels"], K, K))
     assert acc >= 0.90
+
+
+# --------------------------------------------------------------------------
+# Minibatch mode (ISSUE 2)
+# --------------------------------------------------------------------------
+
+def test_minibatch_kmeans_reaches_full_batch_quality(blobs, c0):
+    """B-of-C subsampled sweeps with 1/t learning-rate updates land within
+    tolerance of the full-batch objective and partition while touching a
+    quarter of the points per iteration."""
+    full = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=100, stop_when_frozen=True))
+    rf = full.fit(blobs, c0, h_star=1e-4)
+    mb = ClusteringEngine("kmeans", EngineConfig(
+        mode="minibatch", chunks=8, batch_chunks=2, patience=3,
+        max_iters=300, stop_when_frozen=True))
+    rm = mb.fit(blobs, c0, h_star=1e-4)
+    np.testing.assert_allclose(float(rm.objective), float(rf.objective),
+                               rtol=0.02)
+    acc = float(core.rand_index(rm.labels, rf.labels, K, K))
+    assert acc >= 0.99, acc
+    # paired Eq. 7 h actually stops the loop (no run-to-max_iters)
+    assert int(rm.n_iters) < 300
+
+
+def test_minibatch_em_reaches_full_batch_quality(blobs, c0):
+    p0 = em_gmm.init_from_kmeans(blobs, c0)
+    full = ClusteringEngine("em", EngineConfig(max_iters=100))
+    rf = full.fit(blobs, p0, h_star=1e-5)
+    mb = ClusteringEngine("em", EngineConfig(
+        mode="minibatch", chunks=8, batch_chunks=2, patience=3,
+        max_iters=300))
+    rm = mb.fit(blobs, p0, h_star=1e-4)
+    # stepwise EM on subsampled responsibilities: per-point loglik within 1%
+    np.testing.assert_allclose(float(rm.objective), float(rf.objective),
+                               rtol=0.01)
+    acc = float(core.rand_index(rm.labels, rf.labels, K, K))
+    assert acc >= 0.95, acc
+
+
+def test_minibatch_restarts_compose(blobs):
+    """Minibatch × vmapped restarts: every restart draws its own chunk
+    stream, stops on its own mask, and the best full-sweep objective wins."""
+    mb = ClusteringEngine("kmeans", EngineConfig(
+        mode="minibatch", chunks=8, batch_chunks=2, patience=3,
+        max_iters=200, stop_when_frozen=True))
+    rr = mb.fit_restarts(blobs, key=jax.random.PRNGKey(5), k=K, restarts=3,
+                         h_star=1e-4)
+    assert rr.objectives.shape == (3,)
+    best = int(np.argmin(np.asarray(rr.objectives)))
+    assert int(rr.best_index) == best
+    np.testing.assert_allclose(float(rr.best.objective),
+                               float(rr.objectives[best]))
+    full = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=100, stop_when_frozen=True))
+    rf = full.fit(blobs, core.kmeans_plus_plus_init(
+        jax.random.PRNGKey(0), blobs, K), h_star=1e-4)
+    np.testing.assert_allclose(float(rr.best.objective),
+                               float(rf.objective), rtol=0.02)
+
+
+def test_minibatch_reduces_points_touched_per_iteration(blobs, c0):
+    """The compiled minibatch sweep really gathers B chunks, not all C —
+    checked on the jaxpr-level shapes of the scan carry input."""
+    from repro.core.engine import _minibatch_sweep, KMEANS
+    cfg = EngineConfig(mode="minibatch", chunks=8, batch_chunks=2,
+                       max_iters=10)
+    xc, mask = core.chunk_points(blobs, 8)
+    stats, n_batch = jax.jit(
+        lambda p, k: _minibatch_sweep(KMEANS, cfg, xc, mask, p, k)
+    )(c0, jax.random.PRNGKey(0))
+    assert float(n_batch) == pytest.approx(2 * mask.shape[1])
+    assert float(n_batch) <= 0.26 * blobs.shape[0]
+
+
+def test_minibatch_too_few_effective_chunks_fails_loud():
+    """chunk_points clamps C to the row count; a tiny x must hit the
+    engine's message, not choice(replace=False)'s trace error."""
+    tiny = jnp.asarray(np.arange(20.0).reshape(10, 2), jnp.float32)
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        mode="minibatch", chunks=64, batch_chunks=16, max_iters=5))
+    c0 = jnp.asarray([[0.0, 1.0], [18.0, 19.0]], jnp.float32)
+    with pytest.raises(ValueError, match="effective chunks"):
+        eng.fit(tiny, c0)
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="chunks >= 2"):
+        EngineConfig(mode="minibatch")
+    with pytest.raises(ValueError, match="batch_chunks < chunks"):
+        EngineConfig(mode="minibatch", chunks=8, batch_chunks=8)
+    with pytest.raises(ValueError, match="unknown engine mode"):
+        EngineConfig(mode="online")
+    with pytest.raises(NotImplementedError, match="static slices"):
+        EngineConfig(mode="minibatch", chunks=8, batch_chunks=2,
+                     use_kernel=True)
+    with pytest.raises(ValueError, match="decay"):
+        EngineConfig(mode="minibatch", chunks=8, batch_chunks=2, decay=0.0)
+
+
+def test_fit_restarts_use_kernel_fails_loud(blobs):
+    """No vmap batching rule for the Pallas kernels yet: fit_restarts must
+    raise with an actionable message, not silently fall back."""
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=10, use_kernel=True))
+    with pytest.raises(NotImplementedError,
+                       match="no vmap batching rule"):
+        eng.fit_restarts(blobs, key=jax.random.PRNGKey(0), k=K, restarts=2)
+
+
+# --------------------------------------------------------------------------
+# mode="full" is bit-identical to the pre-PR engine (regression guard)
+# --------------------------------------------------------------------------
+
+# Goldens recorded from the engine at 7a77552 (pre-minibatch), CPU f32.
+_GOLD_KM_ITERS = 2
+_GOLD_KM_J = 3033.8115234375
+_GOLD_EM_ITERS = 6
+_GOLD_EM_LL = -5653.07080078125
+
+
+def _golden_blobs():
+    rng = np.random.default_rng(42)
+    centers = np.array([[0, 0, 0], [8, 8, 8], [-8, 8, 0], [8, -8, 4]], float)
+    x = np.concatenate([c + rng.normal(0, 1.0, (250, 3)) for c in centers])
+    return jnp.asarray(x.astype(np.float32))
+
+
+def test_full_mode_matches_pre_minibatch_goldens():
+    """Adding mode/batch_chunks/decay/seed/ema to the engine state must not
+    perturb the full-batch path: same iteration counts and (to fp32 ulp)
+    the same objectives as the pre-PR engine on a pinned input."""
+    x = _golden_blobs()
+    c0 = jnp.asarray([[1., 1., 1.], [7., 7., 7.],
+                      [-7., 7., 0.], [7., -7., 3.]], jnp.float32)
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=100, use_h_stop=True, stop_when_frozen=True))
+    r = eng.fit(x, c0, h_star=1e-4)
+    assert int(r.n_iters) == _GOLD_KM_ITERS
+    np.testing.assert_allclose(float(r.objective), _GOLD_KM_J, rtol=1e-6)
+
+    p0 = em_gmm.init_from_kmeans(x, c0)
+    enge = ClusteringEngine("em", EngineConfig(max_iters=60))
+    re_ = enge.fit(x, p0, h_star=1e-5)
+    assert int(re_.n_iters) == _GOLD_EM_ITERS
+    np.testing.assert_allclose(float(re_.objective), _GOLD_EM_LL, rtol=1e-6)
 
 
 # --------------------------------------------------------------------------

@@ -1,8 +1,6 @@
 """The trip-count-aware HLO analyzer — the roofline's foundation."""
-import subprocess
-import sys
-import textwrap
-
+import jax
+import jax.numpy as jnp
 import pytest
 
 from repro.launch.hlo_cost import (analyze, parse_computations, _parse_op_line,
@@ -32,12 +30,13 @@ def test_parse_op_line_root_and_noise():
     assert _parse_op_line("// comment") is None
 
 
-_GEN = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import repro.compat  # jax API shims first
-    import jax, jax.numpy as jnp
+@pytest.fixture(scope="module")
+def scan_hlo():
+    """Compile a sharded scan on the in-process 8-device host platform
+    (conftest sets the device count session-wide) and return its HLO."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+    if jax.device_count() < 8:
+        pytest.skip(f"needs 8 devices, have {jax.device_count()}")
 
     def f(w, x):
         def step(h, _):
@@ -53,18 +52,7 @@ _GEN = textwrap.dedent("""
         c = jax.jit(f, in_shardings=(ws, xs)).lower(
             jax.ShapeDtypeStruct((256, 256), jnp.float32),
             jax.ShapeDtypeStruct((128, 256), jnp.float32)).compile()
-    print("BEGIN_HLO")
-    print(c.as_text())
-""")
-
-
-@pytest.fixture(scope="module")
-def scan_hlo():
-    r = subprocess.run([sys.executable, "-c", _GEN], capture_output=True,
-                       text=True, timeout=300, cwd="/root/repo",
-                       env={**__import__("os").environ, "PYTHONPATH": "src"})
-    assert "BEGIN_HLO" in r.stdout, r.stderr
-    return r.stdout.split("BEGIN_HLO")[1]
+    return c.as_text()
 
 
 def test_trip_count_multiplication_exact(scan_hlo):

@@ -1,5 +1,7 @@
 """Property-based early-stop invariants (ISSUE 1): objective monotonicity,
-change-rate scale invariance, LongTailModel persistence round-trip.
+change-rate scale invariance, LongTailModel persistence round-trip; plus
+streamed k-means++ invariants (ISSUE 2): k distinct in-bounds picks under
+any chunking, and exact chunks=1 equivalence with the monolithic pass.
 
 Runs under real hypothesis when installed, or under the seeded
 mini-hypothesis shim in conftest.py on a bare JAX install.
@@ -62,6 +64,57 @@ def test_change_rate_scale_invariant(alpha, j_prev, delta):
         h2 = float(change_rate(jnp.float64(alpha * j_curr),
                                jnp.float64(alpha * j_prev)))
     assert h2 == pytest.approx(h1, rel=1e-9, abs=1e-15)
+
+
+def _monolithic_kmeans_pp(key, x, k):
+    """The historical flat k-means++ pass (resident [N] d², resident [N, D]
+    difference temporaries) with the engine's key schedule: the reference
+    the streamed implementation must reproduce bit-for-bit at chunks=1."""
+    x = x.astype(jnp.float32)
+    n = x.shape[0]
+    key, sub = jax.random.split(key)
+    first = x[jax.random.randint(sub, (), 0, n)]
+    cent = [first]
+    d2 = jnp.sum((x - first) ** 2, axis=-1)
+    for _ in range(1, k):
+        key, sub = jax.random.split(key)
+        probs = d2 / jnp.maximum(jnp.sum(d2), 1e-30)
+        c = x[jax.random.choice(sub, n, p=probs)]
+        cent.append(c)
+        d2 = jnp.minimum(d2, jnp.sum((x - c) ** 2, axis=-1))
+    return jnp.stack(cent)
+
+
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 6),
+       n=st.integers(50, 400), chunks=st.integers(1, 13))
+@settings(max_examples=12, deadline=None)
+def test_streamed_kmeanspp_picks_k_distinct_inbounds_points(seed, k, n,
+                                                            chunks):
+    """For ANY chunking (dividing n or not, more chunks than needed or not)
+    the streamed D² sampler returns k distinct rows of x — never a padding
+    row, never a repeat (chosen points carry exactly zero d² mass)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 5.0, (n, 3)).astype(np.float32))
+    c = core.kmeans_plus_plus_init(jax.random.PRNGKey(seed), x, k,
+                                   chunks=chunks)
+    got = np.asarray(c)
+    rows = {tuple(r) for r in np.asarray(x)}
+    assert all(tuple(r) in rows for r in got), "picked a non-data point"
+    assert len({tuple(r) for r in got}) == k, "picked a duplicate"
+
+
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 6))
+@settings(max_examples=12, deadline=None)
+def test_streamed_kmeanspp_chunks1_equals_monolithic_exactly(seed, k):
+    """chunks=1 must reduce the scan machinery to the flat pass bit-for-bit
+    (same key schedule, same draws, same arithmetic) — the guard that lets
+    every existing seed keep its value."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 5.0, (257, 4)).astype(np.float32))
+    key = jax.random.PRNGKey(seed)
+    a = _monolithic_kmeans_pp(key, x, k)
+    b = core.kmeans_plus_plus_init(key, x, k, chunks=1)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 @given(seed=st.integers(0, 99), a=st.floats(0.5, 3.0))

@@ -1,4 +1,5 @@
-"""Serving: continuous batching correctness with unaligned prompts."""
+"""Serving: continuous batching correctness with unaligned prompts, plus
+data-parallel prefill on the in-process 8-device mesh (conftest)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -61,6 +62,21 @@ def test_decode_vector_positions_match_scalar():
                               jnp.full((b,), s - 1, jnp.int32))
     np.testing.assert_allclose(np.asarray(l_scalar, np.float32),
                                np.asarray(l_vector, np.float32),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_forward_batch_sharded_matches_replicated(mesh8):
+    """Prefill logits with the batch sharded over 8 devices == the
+    single-device result — the serving batch axis is safe to scale out.
+    Runs in-process on the session's forced host devices (no subprocess)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    toks = jax.random.randint(jax.random.PRNGKey(3), (8, 12), 0, CFG.vocab)
+    ref, _ = forward(PARAMS, CFG, tokens=toks)
+    sharded = jax.device_put(toks, NamedSharding(mesh8, P("d", None)))
+    out, _ = jax.jit(lambda t: forward(PARAMS, CFG, tokens=t))(sharded)
+    assert len(out.sharding.device_set) == 8
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
                                rtol=2e-2, atol=2e-3)
 
 
