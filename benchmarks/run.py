@@ -427,6 +427,92 @@ def minibatch_scaling():
     return rows
 
 
+@bench("minibatch_shard")
+def minibatch_shard():
+    """Sharded minibatch clustering across device counts (submeshes of the
+    host platform): rand index vs the full-batch partition, sweep-equivalent
+    compute fraction, and wall time per device count.
+
+    Persists ``BENCH_minibatch_shard.json`` at the repo root — the
+    perf-trajectory artifact the repo's history tracks (the CSVs under
+    ``benchmarks/out/`` are per-run scratch).  Wall times on the forced
+    host-platform device counts measure the collective + partitioning
+    overhead of the composed path, not accelerator speedups.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro import compat  # noqa: F401  (make_mesh shim)
+    from repro import core
+    from repro.core.engine import ClusteringEngine, EngineConfig
+
+    rng = np.random.default_rng(0)
+    n, d, k, chunks, b = 1 << 18, 4, 8, 64, 16   # = minibatch_scaling's set
+    centers = rng.normal(0, 6.0, (k, d))
+    x = np.concatenate([c + rng.normal(0, 1.5, (n // k, d)) for c in centers])
+    x = jnp.asarray(x[rng.permutation(n)].astype(np.float32))
+    c0 = core.kmeans_plus_plus_init(jax.random.PRNGKey(0), x, k,
+                                    chunks=chunks)
+
+    full = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=300, chunks=chunks, use_h_stop=False,
+        stop_when_frozen=True))
+    rf = full.fit(x, c0)
+    jax.block_until_ready(rf.labels)
+
+    # decay 0.95 = the minibatch_scaling 25%-touch recipe (mild forgetting
+    # keeps late steps large enough to land ≥99% of full-batch accuracy)
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        mode="minibatch", chunks=chunks, batch_chunks=b, patience=5,
+        max_iters=600, decay=0.95, stop_when_frozen=True))
+    devs = jax.devices()
+    counts = [m for m in (1, 2, 4, 8) if m <= len(devs)]
+    skipped = [m for m in (1, 2, 4, 8) if m > len(devs)]
+    rows = []
+    for m in counts:
+        mesh = jax.make_mesh((m,), ("data",), devices=devs[:m],
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        res = eng.fit_sharded(x, c0, mesh, h_star=1e-5)   # compile + warm
+        jax.block_until_ready(res.labels)
+        t0 = time.time()
+        res = eng.fit_sharded(x, c0, mesh, h_star=1e-5)
+        jax.block_until_ready(res.labels)
+        wall = time.time() - t0
+        r = float(core.rand_index(res.labels, rf.labels, k, k))
+        rows.append({
+            "name": f"minibatch_shard_d{m}", "devices": m,
+            "iters": int(res.n_iters),
+            "rand_vs_full": round(r, 4),
+            "sweep_equiv_compute_frac": round(2 * b / chunks, 4),
+            "wall_s_fit": round(wall, 3),
+        })
+
+    if skipped:
+        # never silently overwrite the tracked multi-device trajectory with
+        # a partial sweep — say what's missing and keep the old artifact
+        print(f"# minibatch_shard: only {len(devs)} device(s) visible, "
+              f"skipped counts {skipped}; NOT writing "
+              "BENCH_minibatch_shard.json (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8 for the full sweep)")
+        return rows
+    payload = {
+        "benchmark": "minibatch_shard",
+        "n": n, "d": d, "k": k, "chunks": chunks, "batch_chunks": b,
+        "decay": 0.95,
+        "note": "device counts are XLA host-platform emulation "
+                "(--xla_force_host_platform_device_count); wall times "
+                "measure collective/partitioning overhead on CPU, not "
+                "accelerator scaling",
+        "rows": rows,
+    }
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_minibatch_shard.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return rows
+
+
 # --------------------------------------------------------------------------
 # Roofline table (reads experiments/dryrun/*.json → §Roofline source data)
 # --------------------------------------------------------------------------

@@ -108,6 +108,13 @@ def minibatch_mstep(params: GMMParams, r_sum, r_x, r_x2, v, n_batch,
     by large global steps.  ``decay`` < 1 forgets old mass exponentially;
     ``decay`` = 1 recovers the plain stochastic-approximation schedule.
 
+    Sharded contract (shard_map): ``r_sum``/``r_x``/``r_x2`` and
+    ``n_batch`` must arrive already psum'd over the data axes (the engine
+    reduces shard-local E-step stats before the update), so ``v`` holds
+    GLOBAL responsibility mass, η_k anneals on the global stream, the
+    weight estimate ``r_sum / n_batch`` is the global batch fraction, and
+    (params, v) stay replicated across shards with no extra collective.
+
     Returns (new_params, new_v).  Components with (numerically) zero batch
     responsibility keep their parameters, mirroring ``mstep``.
     """

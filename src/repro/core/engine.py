@@ -197,7 +197,12 @@ class EngineConfig:
     ``decay`` (1.0 = pure 1/t annealing; see the module docstring).  The
     chunk draw is seeded from ``seed`` so runs are reproducible; under
     ``axis_name`` every shard draws the same chunk indices from its local
-    chunking and the psum'd stats keep the stop decision globally agreed.
+    chunking and the psum'd stats + batch count keep the update and the
+    stop decision globally agreed.  The sharded drivers
+    (``ClusteringEngine.fit_sharded`` / ``fit_restarts_sharded``) make the
+    local chunking a row-slice of the *global* one, so the drawn subsample
+    — and hence the whole trajectory — matches the single-device run up to
+    fp32 reduction order.
     """
     max_iters: int = 300
     h_star: float = 0.0
@@ -218,6 +223,17 @@ class EngineConfig:
             raise ValueError(f"unknown engine mode {self.mode!r}")
         if not 0.0 <= self.ema < 1.0:
             raise ValueError(f"ema must be in [0, 1); got {self.ema}")
+        if self.mode == "full":
+            stray = [f"{name}={value!r}" for name, value, default in (
+                ("batch_chunks", self.batch_chunks, 0),
+                ("decay", self.decay, 1.0),
+                ("seed", self.seed, 0),
+                ("ema", self.ema, 0.0)) if value != default]
+            if stray:
+                raise ValueError(
+                    "minibatch-only settings " + ", ".join(stray) +
+                    " have no effect in mode='full' — pass mode='minibatch' "
+                    "(CLI: --mode minibatch) or drop them")
         if self.mode == "minibatch":
             if self.chunks < 2:
                 raise ValueError(
@@ -265,6 +281,26 @@ class RestartResult(NamedTuple):
 _chunk_points = _km.chunk_points
 
 
+def _sweep_chunked(alg, config: EngineConfig, xc, mask, params,
+                   with_labels: bool):
+    """One full pass over a pre-chunked [C, P, D] layout (+ [C, P] mask)
+    → (labels [C, P] | None, sufficient stats), stats psum'd over
+    ``axis_name``.  This is the layout the sharded drivers hand each shard
+    (its row-slice of every global chunk); labels stay in chunk layout so
+    callers can shard/flatten/strip-padding as they need."""
+    def body(acc, inp):
+        xi, mi = inp
+        lab, st = alg.chunk_stats(xi, mi, params)
+        acc = jax.tree.map(jnp.add, acc, st)
+        return acc, (lab if with_labels else jnp.zeros((), jnp.int32))
+
+    stats, labs = jax.lax.scan(body, alg.zero_stats(params), (xc, mask))
+    if config.axis_name is not None:
+        stats = jax.tree.map(
+            lambda a: jax.lax.psum(a, config.axis_name), stats)
+    return (labs if with_labels else None), stats
+
+
 def _sweep(alg, config: EngineConfig, x, params, with_labels: bool):
     """One full pass over the points → (labels | None, sufficient stats).
 
@@ -284,15 +320,11 @@ def _sweep(alg, config: EngineConfig, x, params, with_labels: bool):
             labels = None
     else:
         xc, mask = _chunk_points(x, config.chunks)
-
-        def body(acc, inp):
-            xi, mi = inp
-            lab, st = alg.chunk_stats(xi, mi, params)
-            acc = jax.tree.map(jnp.add, acc, st)
-            return acc, (lab if with_labels else jnp.zeros((), jnp.int32))
-
-        stats, labs = jax.lax.scan(body, alg.zero_stats(params), (xc, mask))
-        labels = labs.reshape(-1)[: x.shape[0]] if with_labels else None
+        labels, stats = _sweep_chunked(alg, config, xc, mask, params,
+                                       with_labels)
+        if with_labels:
+            labels = labels.reshape(-1)[: x.shape[0]]
+        return labels, stats
     if config.axis_name is not None:
         stats = jax.tree.map(
             lambda a: jax.lax.psum(a, config.axis_name), stats)
@@ -375,13 +407,16 @@ def _live(config: EngineConfig, iteration, hits, moved):
     return live
 
 
-@functools.partial(jax.jit, static_argnames=("alg", "config"))
-def _fit(x, params0, h_star, alg, config: EngineConfig):
-    x = x.astype(jnp.float32)
-    n_total = _global_n(x, config)
-    params0 = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0)
+def _fit_loop(alg, config: EngineConfig, params0, h_star, n_total, sweep,
+              mb_data):
+    """Shared single-fit driver: while_loop + Eq. 7 stop + final labels pass.
+
+    ``sweep(params, with_labels)`` is the full-pass closure — over flat
+    points (``_fit``) or over a pre-chunked shard-local layout
+    (``_fit_chunked``); ``mb_data`` is the (xc, mask) chunk layout the
+    minibatch draws sample from (None in full mode)."""
     minibatch = config.mode == "minibatch"
-    xc, mask = _chunk_points(x, config.chunks) if minibatch else (None, None)
+    xc, mask = mb_data if minibatch else (None, None)
     init = _State(
         params=params0,
         j_curr=jnp.asarray(jnp.inf, jnp.float32),
@@ -420,7 +455,7 @@ def _fit(x, params0, h_star, alg, config: EngineConfig):
             else:
                 j, h = j_old, s.h
         else:
-            _, stats = _sweep(alg, config, x, s.params, with_labels=False)
+            _, stats = sweep(s.params, False)
             j = alg.objective(stats)
             new_params = alg.update(s.params, stats, n_total)
             key, carry = s.key, s.carry
@@ -436,9 +471,47 @@ def _fit(x, params0, h_star, alg, config: EngineConfig):
     final = jax.lax.while_loop(cond, body, init)
     # the labels pass is always a full sweep — minibatch only changes how
     # the parameters got there, not the result contract
-    labels, stats = _sweep(alg, config, x, final.params, with_labels=True)
+    labels, stats = sweep(final.params, True)
     return EngineResult(final.params, labels, alg.objective(stats),
                         final.iteration, final.h)
+
+
+@functools.partial(jax.jit, static_argnames=("alg", "config"))
+def _fit(x, params0, h_star, alg, config: EngineConfig):
+    x = x.astype(jnp.float32)
+    n_total = _global_n(x, config)
+    params0 = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0)
+    mb = (_chunk_points(x, config.chunks)
+          if config.mode == "minibatch" else None)
+
+    def sweep(params, with_labels):
+        return _sweep(alg, config, x, params, with_labels=with_labels)
+
+    return _fit_loop(alg, config, params0, h_star, n_total, sweep, mb)
+
+
+@functools.partial(jax.jit, static_argnames=("alg", "config"))
+def _fit_chunked(xc, mask, params0, h_star, alg, config: EngineConfig):
+    """``_fit`` on a pre-chunked [C, P, D] (+ [C, P] mask) layout — the
+    shard_map entry point.  Under ``axis_name`` every shard holds its
+    row-slice of each *global* chunk, so the replicated seeded draw selects
+    the same global subsample on every shard and the psum'd stats keep the
+    update + paired Eq. 7 stop identical to the single-device trajectory.
+    Labels come back in the [C, P] chunk layout (callers flatten and strip
+    the mask-0 padding after gathering across shards)."""
+    xc = xc.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    n_total = jnp.sum(mask)
+    if config.axis_name is not None:
+        n_total = jax.lax.psum(n_total, config.axis_name)
+    params0 = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0)
+    mb = (xc, mask) if config.mode == "minibatch" else None
+
+    def sweep(params, with_labels):
+        return _sweep_chunked(alg, config, xc, mask, params,
+                              with_labels=with_labels)
+
+    return _fit_loop(alg, config, params0, h_star, n_total, sweep, mb)
 
 
 @functools.partial(jax.jit, static_argnames=("alg", "config"))
@@ -475,26 +548,27 @@ def _mask_tree(active, new, old):
     return jax.tree.map(one, new, old)
 
 
-@functools.partial(jax.jit, static_argnames=("alg", "config"))
-def _fit_restarts(x, params0, h_star, alg, config: EngineConfig):
-    x = x.astype(jnp.float32)
-    n_total = _global_n(x, config)
-    r = jax.tree.leaves(params0)[0].shape[0]
-    params0 = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0)
-    minibatch = config.mode == "minibatch"
-    xc, mask = _chunk_points(x, config.chunks) if minibatch else (None, None)
+def _restart_loop(alg, config: EngineConfig, params0, h_star, n_total,
+                  sweep_stats, sweep_labels, mb_data):
+    """Shared multi-restart driver (vmapped body + per-restart stop masks).
 
-    sweep_stats = jax.vmap(
-        lambda p: _sweep(alg, config, x, p, with_labels=False)[1])
-    sweep_labels = jax.vmap(
-        lambda p: _sweep(alg, config, x, p, with_labels=True))
-    mb_draw_v = jax.vmap(
-        lambda kk: _minibatch_draw(config, xc, mask, kk))
-    mb_stats_v = jax.vmap(
-        lambda xb, mb, p: _minibatch_stats(alg, config, xb, mb, p))
-    mb_update_v = jax.vmap(
-        lambda p, st, cv, nb: alg.minibatch_update(p, st, cv, nb,
-                                                   config.decay))
+    ``sweep_stats(params)`` / ``sweep_labels(params)`` are the vmapped
+    full-pass closures (flat or chunked layout); ``mb_data`` is the
+    (xc, mask) chunk layout per-restart minibatch draws sample from.
+    Under shard_map the psums inside the closures batch over the restart
+    axis (vmap-of-psum), so every shard agrees on each restart's stop
+    iteration and on the final argbest."""
+    r = jax.tree.leaves(params0)[0].shape[0]
+    minibatch = config.mode == "minibatch"
+    if minibatch:
+        xc, mask = mb_data
+        mb_draw_v = jax.vmap(
+            lambda kk: _minibatch_draw(config, xc, mask, kk))
+        mb_stats_v = jax.vmap(
+            lambda xb, mb, p: _minibatch_stats(alg, config, xb, mb, p))
+        mb_update_v = jax.vmap(
+            lambda p, st, cv, nb: alg.minibatch_update(p, st, cv, nb,
+                                                       config.decay))
     update_v = jax.vmap(alg.update, in_axes=(0, 0, None))
     objective_v = jax.vmap(alg.objective)
     moved_v = jax.vmap(alg.moved)
@@ -575,6 +649,45 @@ def _fit_restarts(x, params0, h_star, alg, config: EngineConfig):
                          objectives=objectives, n_iters=final.n_iters)
 
 
+@functools.partial(jax.jit, static_argnames=("alg", "config"))
+def _fit_restarts(x, params0, h_star, alg, config: EngineConfig):
+    x = x.astype(jnp.float32)
+    n_total = _global_n(x, config)
+    params0 = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0)
+    sweep_stats = jax.vmap(
+        lambda p: _sweep(alg, config, x, p, with_labels=False)[1])
+    sweep_labels = jax.vmap(
+        lambda p: _sweep(alg, config, x, p, with_labels=True))
+    mb = (_chunk_points(x, config.chunks)
+          if config.mode == "minibatch" else None)
+    return _restart_loop(alg, config, params0, h_star, n_total, sweep_stats,
+                         sweep_labels, mb)
+
+
+@functools.partial(jax.jit, static_argnames=("alg", "config"))
+def _fit_restarts_chunked(xc, mask, params0, h_star, alg,
+                          config: EngineConfig):
+    """``_fit_restarts`` on the pre-chunked shard-local layout (see
+    ``_fit_chunked``): vmapped restarts *inside* shard_map, per-restart
+    chunk streams and stop masks, stats psum'd per restart.  The best
+    restart's labels come back as [C, P] (chunk layout)."""
+    xc = xc.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    n_total = jnp.sum(mask)
+    if config.axis_name is not None:
+        n_total = jax.lax.psum(n_total, config.axis_name)
+    params0 = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0)
+    sweep_stats = jax.vmap(
+        lambda p: _sweep_chunked(alg, config, xc, mask, p,
+                                 with_labels=False)[1])
+    sweep_labels = jax.vmap(
+        lambda p: _sweep_chunked(alg, config, xc, mask, p,
+                                 with_labels=True))
+    mb = (xc, mask) if config.mode == "minibatch" else None
+    return _restart_loop(alg, config, params0, h_star, n_total, sweep_stats,
+                         sweep_labels, mb)
+
+
 # --------------------------------------------------------------------------
 # Public facade
 # --------------------------------------------------------------------------
@@ -641,3 +754,108 @@ class ClusteringEngine:
         hs = self.config.h_star if h_star is None else h_star
         return _fit_restarts(x, params0, jnp.asarray(hs, jnp.float32),
                              self.algorithm, self.config)
+
+    # -- sharded drivers (shard_map over the mesh's data axes) -------------
+    def _sharded_setup(self, x, mesh):
+        """Chunk globally, shard each chunk's rows, derive the psum config.
+
+        Returns (cfg, xc, mask, xc_spec, mask_spec) with xc [C, P', D] and
+        mask [C, P'] placed on the mesh (P' = P padded to the data-axis
+        extent; padding rows carry mask 0, so no row is ever truncated).
+        """
+        from jax.sharding import PartitionSpec as P
+        from repro.distribution.sharding import (chunked_points_spec,
+                                                 mesh_axes,
+                                                 shard_chunked_points)
+        if self.config.use_kernel:
+            raise NotImplementedError(
+                "the sharded drivers stream through the jnp chunk_stats "
+                "path (masked [C, P, D] layout); the Pallas entry points "
+                "have no row-sharded variant yet — use use_kernel=False "
+                "with fit_sharded / fit_restarts_sharded")
+        dp, _, _ = mesh_axes(mesh)
+        if not dp:
+            raise ValueError(
+                f"mesh axes {mesh.axis_names} contain no data axis (name "
+                "one 'data' or 'pod'); the sharded drivers shard the "
+                "points over the data axes")
+        axis = dp if len(dp) > 1 else dp[0]
+        cfg = dataclasses.replace(self.config, axis_name=axis)
+        xc, mask = _chunk_points(jnp.asarray(x, jnp.float32), cfg.chunks)
+        xc, mask = shard_chunked_points(xc, mask, mesh)
+        xc_spec = chunked_points_spec(mesh)
+        return cfg, xc, mask, xc_spec, P(*tuple(xc_spec)[:2])
+
+    @staticmethod
+    def _strip_chunk_padding(labels, mask):
+        """[C, P] chunk-layout labels → [N] flat labels in input row order
+        (the chunk layout is row-major; padding rows have mask 0)."""
+        return labels.reshape(-1)[mask.reshape(-1) > 0]
+
+    def fit_sharded(self, x, params0, mesh, h_star=None) -> EngineResult:
+        """Distributed fit under ``shard_map`` — both engine modes.
+
+        The points are chunked *globally* to [C, P, D] (the engine's one
+        chunk layout) and each chunk's rows are sharded over the mesh's
+        data axes, so a shard's local chunk c is a row-slice of global
+        chunk c.  Per iteration every shard draws the same ``batch_chunks``
+        chunk indices (the sampling key is replicated), computes stats over
+        its resident slice, and psums once — the subsample, the
+        learning-rate update, and the paired Eq. 7 stop are therefore
+        identical to the single-device run up to fp32 reduction order.
+        Labels cover all N input rows (chunk padding is stripped).
+        """
+        from jax.sharding import PartitionSpec as P
+        cfg, xc, mask, xc_spec, mask_spec = self._sharded_setup(x, mesh)
+        params0 = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0)
+        rep = jax.tree.map(lambda a: P(*(None,) * jnp.ndim(a)), params0)
+        hs = self.config.h_star if h_star is None else h_star
+        fit = jax.shard_map(
+            functools.partial(_fit_chunked, alg=self.algorithm, config=cfg),
+            mesh=mesh,
+            in_specs=(xc_spec, mask_spec, rep, P()),
+            out_specs=EngineResult(params=rep, labels=mask_spec,
+                                   objective=P(), n_iters=P(), h=P()),
+            check_vma=False)
+        res = fit(xc, mask, params0, jnp.asarray(hs, jnp.float32))
+        return res._replace(labels=self._strip_chunk_padding(res.labels,
+                                                             mask))
+
+    def fit_restarts_sharded(self, x, params0=None, mesh=None, *, key=None,
+                             k=None, restarts=None,
+                             h_star=None) -> RestartResult:
+        """Vmapped multi-restart fit *inside* ``shard_map`` (vmap-of-psum):
+        every restart keeps its own replicated chunk-draw stream and stop
+        mask, stats are psum'd per restart, and all shards agree on each
+        restart's stop iteration and on the final best-objective index.
+        Accepts stacked ``params0`` or (key, k, restarts), like
+        ``fit_restarts``."""
+        from jax.sharding import PartitionSpec as P
+        if mesh is None:
+            raise ValueError("fit_restarts_sharded needs a mesh")
+        x = jnp.asarray(x)
+        if params0 is None:
+            if key is None or k is None or restarts is None:
+                raise ValueError(
+                    "fit_restarts_sharded needs params0 or (key, k, "
+                    "restarts)")
+            params0 = self.init_restarts(key, x, k, restarts)
+        cfg, xc, mask, xc_spec, mask_spec = self._sharded_setup(x, mesh)
+        params0 = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0)
+        rep = jax.tree.map(lambda a: P(*(None,) * jnp.ndim(a)), params0)
+        best_rep = jax.tree.map(lambda a: P(*(None,) * (jnp.ndim(a) - 1)),
+                                params0)
+        hs = self.config.h_star if h_star is None else h_star
+        fit = jax.shard_map(
+            functools.partial(_fit_restarts_chunked, alg=self.algorithm,
+                              config=cfg),
+            mesh=mesh,
+            in_specs=(xc_spec, mask_spec, rep, P()),
+            out_specs=RestartResult(
+                best=EngineResult(params=best_rep, labels=mask_spec,
+                                  objective=P(), n_iters=P(), h=P()),
+                best_index=P(), objectives=P(None), n_iters=P(None)),
+            check_vma=False)
+        rr = fit(xc, mask, params0, jnp.asarray(hs, jnp.float32))
+        return rr._replace(best=rr.best._replace(
+            labels=self._strip_chunk_padding(rr.best.labels, mask)))

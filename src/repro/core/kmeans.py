@@ -89,6 +89,15 @@ def minibatch_update_centroids(centroids, sums, counts, v, decay: float = 1.0):
     drifting streams); ``decay`` = 1 is Sculley's schedule exactly.  The
     first batch a cluster sees has n_k = v_k, i.e. a full Lloyd step.
 
+    Sharded contract (shard_map): ``sums``/``counts`` must arrive already
+    psum'd over the data axes — the engine reduces the shard-local batch
+    stats *before* calling this rule — so ``v`` accumulates GLOBAL
+    per-cluster counts, the 1/t step size anneals on the global point
+    stream, and (params, v) stay bitwise replicated across shards without
+    any further collective.  Feeding shard-local counts instead would both
+    shrink the steps (B/shards points per batch) and de-synchronise v
+    wherever shard contents differ.
+
     Returns (new_centroids, new_v); clusters with no batch members keep both.
     """
     v_new = decay * v + counts

@@ -127,12 +127,13 @@ def param_shardings(params_struct, mesh: Mesh, *, fsdp: bool = True):
 
 def points_spec(mesh: Mesh) -> P:
     """[N, D] clustering points: N over the data axes, D replicated — the
-    layout the engine's per-sweep psum of [K,D]+[K]+[1] stats assumes.
+    layout the engine's per-sweep psum of [K,D]+[K]+[1] stats assumes
+    (the full-sweep shard_map drivers).
 
-    Minibatch mode composes with this layout shard-locally: every shard
-    chunks its resident rows, draws the same B chunk *indices* (the sampling
-    key is replicated), and the engine psums the subsample's stats plus its
-    point count, so the paired Eq. 7 stop decision stays globally agreed.
+    Minibatch mode shards the pre-chunked [C, N/C, D] layout instead (see
+    :func:`chunked_points_spec`): chunking *before* sharding keeps every
+    shard's local chunk a row-slice of the global chunk, so the replicated
+    chunk draw subsamples identically to the single-device run.
     """
     dp, _, _ = mesh_axes(mesh)
     return P(dp if dp else None, None)
@@ -151,6 +152,43 @@ def shard_points(x, mesh: Mesh):
     xs = jax.device_put(jax.numpy.asarray(x[:n]),
                         NamedSharding(mesh, points_spec(mesh)))
     return xs, x.shape[0] - n
+
+
+def chunked_points_spec(mesh: Mesh) -> P:
+    """[C, N/C, D] pre-chunked points (``kmeans.chunk_points`` layout):
+    chunk axis replicated, rows-within-chunk over the data axes, D
+    replicated.
+
+    This is the layout the engine's sharded minibatch/restart drivers use:
+    every shard holds a row-slice of each *global* chunk, so the replicated
+    seeded chunk draw selects the same global subsample on every shard, and
+    shard-local stats only need the engine's once-per-iteration psum.  The
+    accompanying [C, N/C] validity mask shards as ``P(*spec[:2])``.
+    """
+    dp, _, _ = mesh_axes(mesh)
+    return P(None, dp if dp else None, None)
+
+
+def shard_chunked_points(xc, mask, mesh: Mesh):
+    """Pad a [C, P, D] chunk layout's row axis to the data-axis extent and
+    place (xc, mask) with :func:`chunked_points_spec`.
+
+    Padding (vs ``shard_points``'s truncation) is correct here because the
+    chunk layout already carries a validity mask — padded rows get mask 0
+    and contribute nothing to the masked sufficient statistics, so no input
+    row is dropped on the sharded path.
+    """
+    dp, _, _ = mesh_axes(mesh)
+    size = _axis_size(mesh, dp) if dp else 1
+    pad = (-xc.shape[1]) % size
+    if pad:
+        xc = jax.numpy.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        mask = jax.numpy.pad(mask, ((0, 0), (0, pad)))
+    spec = chunked_points_spec(mesh)
+    xs = jax.device_put(jax.numpy.asarray(xc), NamedSharding(mesh, spec))
+    ms = jax.device_put(jax.numpy.asarray(mask),
+                        NamedSharding(mesh, P(*tuple(spec)[:2])))
+    return xs, ms
 
 
 # --------------------------------------------------------------------------

@@ -7,7 +7,8 @@ Pipeline: synthesize/load data â†’ random-sample into groups â†’ 10-fold split â
 run training groups to convergence recording (r_i, h_i) â†’ fit the regression
 (model selection or pinned quadratic) â†’ h* = f(r*) â†’ early-stopped production
 clustering (on-device while_loop; shard_map over the data axis when this host
-has multiple devices) â†’ validation: achieved accuracy vs. the full run +
+has multiple devices â€” full sweeps, minibatch, and vmapped multi-restart all
+compose with --shard) â†’ validation: achieved accuracy vs. the full run +
 cost report (Eq. 6/9/10).
 
 Set ``--devices N`` via XLA host-platform flag *before* launch to exercise
@@ -57,6 +58,26 @@ def train_regression(groups, k: int, algorithm: str, *, max_iters: int,
     return model, time.time() - t0
 
 
+def _data_mesh():
+    """A 1-axis ("data",) mesh over every visible device."""
+    n_dev = len(jax.devices())
+    return jax.make_mesh((n_dev,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def _resolve_shard(shard: bool, n_devices: int) -> bool:
+    """--shard on a 1-device host cannot shard anything: say so out loud
+    (with the fix) instead of silently running the replicated path while
+    the user believes the distributed drivers were exercised."""
+    if shard and n_devices < 2:
+        print("[cluster] --shard requested but only 1 device is visible; "
+              "falling back to the single-device path.  Hint: set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+              "launch to exercise the distributed drivers on one host.")
+        return False
+    return shard
+
+
 def run_production(x, k: int, algorithm: str, h_star: float, *,
                    max_iters: int, seed: int = 0, shard: bool = False,
                    use_kernel: bool = False, patience: int = 3,
@@ -74,7 +95,12 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
     ``mode="minibatch"`` samples ``batch_chunks`` of the ``chunks`` pieces
     per iteration with learning-rate updates (forgetting factor ``decay``) â€”
     the fitted threshold still drives the stop via the engine's paired
-    Eq. 7 change rate.
+    Eq. 7 change rate.  Both minibatch and multi-restart compose with
+    ``shard``: the engine's ``fit_sharded`` / ``fit_restarts_sharded``
+    drivers chunk the points globally and shard each chunk's rows, so the
+    distributed run reproduces the single-device trajectory (same seeded
+    chunk draws, psum'd stats and stop decision) up to fp32 reduction
+    order.
 
     For k-means, ``h_star == 0.0`` (no model) means the full-convergence
     reference run: stop only when the centroids freeze.  An h-based stop at
@@ -85,10 +111,7 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
     key = jax.random.PRNGKey(seed)
     x = jnp.asarray(x)
 
-    if mode == "minibatch" and shard and len(jax.devices()) > 1:
-        raise NotImplementedError(
-            "minibatch + --shard is not wired through the shard_map drivers "
-            "yet; drop --shard or use mode='full'")
+    shard = _resolve_shard(shard, len(jax.devices()))
     full_reference = (algorithm == "kmeans" and model is None
                       and float(h_star) == 0.0 and mode == "full")
     cfg_kw = dict(max_iters=max_iters, patience=patience, chunks=chunks,
@@ -107,12 +130,6 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
     else:
         cfg = EngineConfig(h_star=float(h_star), **cfg_kw)
 
-    if restarts > 1 and shard and len(jax.devices()) > 1:
-        # vmapped restarts inside shard_map is an open item (ROADMAP);
-        # fail loud rather than silently dropping R-1 restarts.
-        raise NotImplementedError(
-            "multi-restart + sharded fit is not supported yet; "
-            "drop --shard or --restarts")
     if restarts > 1:
         eng = ClusteringEngine(algorithm, cfg)
         if algorithm == "em":
@@ -126,7 +143,8 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
         else:
             params0 = eng.init_restarts(key, x, k, restarts)
         t0 = time.time()
-        rr = eng.fit_restarts(x, params0)
+        rr = (eng.fit_restarts_sharded(x, params0, _data_mesh()) if shard
+              else eng.fit_restarts(x, params0))
         jax.block_until_ready(rr.best.labels)
         return (rr.best.labels, float(rr.best.objective),
                 int(rr.best.n_iters), time.time() - t0)
@@ -134,13 +152,29 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
     c0 = core.kmeans_plus_plus_init(key, x, k, chunks=chunks)
     h_star = cfg.h_star
 
-    if shard and len(jax.devices()) > 1:
+    if shard and not use_kernel:
+        # the engine's sharded chunk-layout driver â€” one path for both
+        # modes: cfg already encodes the stop semantics (incl. the
+        # full_reference frozen-centroids guard via use_h_stop=False), and
+        # the padded layout keeps every row (no shard_points truncation),
+        # so the label contract matches the unsharded run
+        eng = ClusteringEngine(algorithm, cfg)
+        params0 = c0 if algorithm == "kmeans" else em_gmm.init_from_kmeans(
+            x, c0)
+        t0 = time.time()
+        res = eng.fit_sharded(x, params0, _data_mesh())
+        jax.block_until_ready(res.labels)
+        return (res.labels, float(res.objective), int(res.n_iters),
+                time.time() - t0)
+
+    if shard:
+        # use_kernel: the fused Pallas contract has no row-sharded chunk
+        # layout yet (fit_sharded raises) â€” keep the flat shard_map
+        # drivers, which truncate N to a shardable size
         from jax.sharding import PartitionSpec as P
         from jax import shard_map
         from repro.distribution.sharding import points_spec, shard_points
-        n_dev = len(jax.devices())
-        mesh = jax.make_mesh((n_dev,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = _data_mesh()
         x, _ = shard_points(x, mesh)           # truncate to shardable size
         if algorithm == "kmeans":
             if full_reference:
@@ -228,6 +262,20 @@ def main():
     ap.add_argument("--instance", default="m5.large")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+
+    if args.mode == "minibatch":
+        # make the bare `--mode minibatch` recipe runnable: the full-sweep
+        # defaults (--chunks 1 --batch-chunks 0) cannot subsample, so pick
+        # the documented 25%-touch defaults and say so
+        defaulted = []
+        if args.chunks < 2:
+            args.chunks = 8
+            defaulted.append(f"--chunks {args.chunks}")
+        if args.batch_chunks < 1:
+            args.batch_chunks = max(1, args.chunks // 4)
+            defaulted.append(f"--batch-chunks {args.batch_chunks}")
+        if defaulted:
+            print("[cluster] minibatch defaults: " + " ".join(defaulted))
 
     n_prod = max(args.prod_groups, 1)
     if args.dataset == "spacenet":

@@ -285,6 +285,21 @@ def test_engine_config_validation():
         EngineConfig(mode="minibatch", chunks=8, batch_chunks=2, decay=0.0)
 
 
+def test_full_mode_rejects_minibatch_only_knobs():
+    """mode='full' used to silently ignore batch_chunks/decay/seed/ema, so
+    a CLI typo like --batch-chunks without --mode minibatch ran a plain
+    full-sweep fit while looking like a minibatch run.  Fail loud instead
+    (ISSUE 3 satellite)."""
+    for kw in ({"batch_chunks": 3}, {"decay": 0.5}, {"seed": 7},
+               {"ema": 0.5}):
+        with pytest.raises(ValueError, match="minibatch-only"):
+            EngineConfig(**kw)
+    with pytest.raises(ValueError, match="minibatch-only"):
+        EngineConfig(mode="full", batch_chunks=3, decay=0.5, seed=7)
+    EngineConfig()                        # defaults stay valid
+    EngineConfig(chunks=8)                # streaming-only full mode too
+
+
 def test_fit_restarts_use_kernel_fails_loud(blobs):
     """No vmap batching rule for the Pallas kernels yet: fit_restarts must
     raise with an actionable message, not silently fall back."""

@@ -1,0 +1,180 @@
+"""Sharded engine drivers (ISSUE 3): fit_sharded / fit_restarts_sharded
+under an in-process 8-device ("data",) mesh must reproduce the
+single-device engine — the globally-chunked layout makes every shard's
+local chunk a row-slice of the global chunk, so the seeded draw selects
+the same subsample and the whole trajectory matches up to fp32 reduction
+order (params within tolerance, identical stop iteration)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import em_gmm
+from repro.core.engine import ClusteringEngine, EngineConfig
+
+K = 4
+
+# one minibatch recipe for the whole file: 2-of-8 chunks per iteration
+MB = dict(mode="minibatch", chunks=8, batch_chunks=2, patience=3,
+          max_iters=300, seed=11)
+
+
+def _data_mesh(mesh8):
+    """The sharded drivers shard over the ("pod", "data") axes; mesh8 only
+    asserts the 8-device substrate is up (its axis is named "d")."""
+    del mesh8
+    return jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    rng = np.random.default_rng(1)
+    centers = np.array([[0, 0, 0], [9, 9, 9], [-9, 9, 0], [9, -9, 5]], float)
+    x = np.concatenate([c + rng.normal(0, 1.0, (512, 3)) for c in centers])
+    x = x[rng.permutation(len(x))]             # unbias the chunk contents
+    return jnp.asarray(x.astype(np.float32))   # N=2048 = 8 devices · 256
+
+
+@pytest.fixture(scope="module")
+def c0(blobs):
+    return core.kmeans_plus_plus_init(jax.random.PRNGKey(0), blobs, K)
+
+
+# --------------------------------------------------------------------------
+# Single-fit parity: sharded minibatch == single-device minibatch
+# --------------------------------------------------------------------------
+
+def test_sharded_minibatch_kmeans_matches_single_device(blobs, c0, mesh8):
+    eng = ClusteringEngine("kmeans", EngineConfig(stop_when_frozen=True,
+                                                  **MB))
+    ref = eng.fit(blobs, c0, h_star=1e-4)
+    res = eng.fit_sharded(blobs, c0, _data_mesh(mesh8), h_star=1e-4)
+    assert int(res.n_iters) == int(ref.n_iters)
+    np.testing.assert_allclose(res.params, ref.params, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(res.objective), float(ref.objective),
+                               rtol=1e-5)
+    assert res.labels.shape == ref.labels.shape
+    assert float((res.labels == ref.labels).mean()) > 0.999
+
+
+def test_sharded_minibatch_em_matches_single_device(blobs, c0, mesh8):
+    p0 = em_gmm.init_from_kmeans(blobs, c0)
+    eng = ClusteringEngine("em", EngineConfig(**MB))
+    ref = eng.fit(blobs, p0, h_star=1e-4)
+    res = eng.fit_sharded(blobs, p0, _data_mesh(mesh8), h_star=1e-4)
+    assert int(res.n_iters) == int(ref.n_iters)
+    np.testing.assert_allclose(res.params.means, ref.params.means,
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(res.params.var, ref.params.var,
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(res.objective), float(ref.objective),
+                               rtol=1e-5)
+    assert float((res.labels == ref.labels).mean()) > 0.999
+
+
+def test_sharded_minibatch_uneven_rows(mesh8):
+    """N not divisible by chunks x devices: the padded chunk layout must
+    keep every real row (no shard_points-style truncation) and still match
+    the single-device fit."""
+    rng = np.random.default_rng(2)
+    x = np.concatenate([c + rng.normal(0, 0.8, (333, 2))
+                        for c in ([0, 0], [10, 10], [-10, 6], [9, -9])])
+    x = jnp.asarray(x[rng.permutation(len(x))].astype(np.float32))  # N=1332
+    c0u = core.kmeans_plus_plus_init(jax.random.PRNGKey(3), x, K)
+    eng = ClusteringEngine("kmeans", EngineConfig(stop_when_frozen=True,
+                                                  **MB))
+    ref = eng.fit(x, c0u, h_star=1e-4)
+    res = eng.fit_sharded(x, c0u, _data_mesh(mesh8), h_star=1e-4)
+    assert res.labels.shape[0] == x.shape[0]
+    assert int(res.n_iters) == int(ref.n_iters)
+    np.testing.assert_allclose(res.params, ref.params, rtol=1e-4, atol=1e-4)
+    assert float((res.labels == ref.labels).mean()) > 0.999
+
+
+def test_sharded_full_mode_matches_single_device(blobs, c0, mesh8):
+    """fit_sharded is mode-agnostic: full-batch chunk sweeps under the same
+    layout agree with the flat single-device path."""
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=100, chunks=4, stop_when_frozen=True))
+    ref = eng.fit(blobs, c0, h_star=1e-4)
+    res = eng.fit_sharded(blobs, c0, _data_mesh(mesh8), h_star=1e-4)
+    assert int(res.n_iters) == int(ref.n_iters)
+    np.testing.assert_allclose(res.params, ref.params, rtol=1e-5, atol=1e-4)
+    assert float((res.labels == ref.labels).mean()) > 0.999
+
+
+# --------------------------------------------------------------------------
+# Multi-restart parity: vmapped restarts inside shard_map (vmap-of-psum)
+# --------------------------------------------------------------------------
+
+def test_sharded_restarts_minibatch_best_j_parity(blobs, mesh8):
+    """--restarts 4 --shard: per-restart chunk streams + stop masks under
+    shard_map must reproduce the unsharded fit_restarts fleet — same best
+    index, objectives within fp tolerance, stop iterations within the one
+    boundary step fp reduction order can flip."""
+    eng = ClusteringEngine("kmeans", EngineConfig(stop_when_frozen=True,
+                                                  **MB))
+    params0 = eng.init_restarts(jax.random.PRNGKey(9), blobs, K, 4)
+    ref = eng.fit_restarts(blobs, params0, h_star=1e-4)
+    rr = eng.fit_restarts_sharded(blobs, params0, _data_mesh(mesh8),
+                                  h_star=1e-4)
+    assert rr.objectives.shape == (4,)
+    assert int(rr.best_index) == int(ref.best_index)
+    np.testing.assert_allclose(rr.objectives, ref.objectives, rtol=1e-3)
+    np.testing.assert_allclose(float(rr.best.objective),
+                               float(ref.best.objective), rtol=1e-4)
+    assert np.max(np.abs(np.asarray(rr.n_iters, np.int64)
+                         - np.asarray(ref.n_iters, np.int64))) <= 1
+    np.testing.assert_allclose(rr.best.params, ref.best.params,
+                               rtol=1e-3, atol=1e-2)
+    assert float((rr.best.labels == ref.best.labels).mean()) > 0.999
+
+
+def test_sharded_restarts_full_mode_parity(blobs, mesh8):
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=100, chunks=4, stop_when_frozen=True))
+    params0 = eng.init_restarts(jax.random.PRNGKey(2), blobs, K, 3)
+    ref = eng.fit_restarts(blobs, params0, h_star=1e-4)
+    rr = eng.fit_restarts_sharded(blobs, params0, _data_mesh(mesh8),
+                                  h_star=1e-4)
+    assert int(rr.best_index) == int(ref.best_index)
+    np.testing.assert_array_equal(np.asarray(rr.n_iters),
+                                  np.asarray(ref.n_iters))
+    np.testing.assert_allclose(rr.objectives, ref.objectives, rtol=1e-5)
+    np.testing.assert_allclose(rr.best.params, ref.best.params,
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_sharded_restarts_em_runs(blobs, c0, mesh8):
+    """EM restarts under shard_map: pytree (GMMParams) specs + soft-count
+    stepwise updates compose; the best restart must carry the max loglik."""
+    eng = ClusteringEngine("em", EngineConfig(**MB))
+    rr = eng.fit_restarts_sharded(blobs, mesh=_data_mesh(mesh8),
+                                  key=jax.random.PRNGKey(4), k=K, restarts=3,
+                                  h_star=1e-4)
+    best = int(np.argmax(np.asarray(rr.objectives)))
+    assert int(rr.best_index) == best
+    np.testing.assert_allclose(float(rr.best.objective),
+                               float(rr.objectives[best]))
+    assert rr.best.labels.shape[0] == blobs.shape[0]
+
+
+# --------------------------------------------------------------------------
+# Guard rails
+# --------------------------------------------------------------------------
+
+def test_fit_sharded_use_kernel_fails_loud(blobs, c0, mesh8):
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=10, chunks=4, use_kernel=True))
+    with pytest.raises(NotImplementedError, match="use_kernel=False"):
+        eng.fit_sharded(blobs, c0, _data_mesh(mesh8))
+
+
+def test_fit_sharded_needs_data_axis(blobs, c0, mesh8):
+    mesh = jax.make_mesh((8,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    eng = ClusteringEngine("kmeans", EngineConfig(max_iters=10, chunks=4))
+    with pytest.raises(ValueError, match="no data axis"):
+        eng.fit_sharded(blobs, c0, mesh)
