@@ -513,6 +513,112 @@ def minibatch_shard():
     return rows
 
 
+@bench("kernel_backends")
+def kernel_backends():
+    """ISSUE 4: the kernel dispatch layer across engine modes and device
+    counts — full vs minibatch sweeps, dispatched kernel (interpret on this
+    host; the same code compiles on TPU/GPU) vs the XLA reference backend,
+    single-device and sharded.
+
+    Persists ``BENCH_kernel_backends.json`` at the repo root (tracked
+    perf-trajectory artifact, like ``BENCH_minibatch_shard.json``).  Wall
+    times on a CPU host measure the interpreter + partitioning overhead of
+    the composed path, not accelerator speedups — the artifact's tracked
+    claims are the parity columns (identical stop iterations and matching
+    objectives across backends), which hold on any host.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro import compat  # noqa: F401  (make_mesh shim)
+    from repro import core
+    from repro.core.engine import ClusteringEngine, EngineConfig
+
+    rng = np.random.default_rng(0)
+    n, d, k, chunks, b = 1 << 15, 4, 8, 16, 4     # 25% touch in minibatch
+    centers = rng.normal(0, 6.0, (k, d))
+    x = np.concatenate([c + rng.normal(0, 1.5, (n // k, d)) for c in centers])
+    x = jnp.asarray(x[rng.permutation(n)].astype(np.float32))
+    c0 = core.kmeans_plus_plus_init(jax.random.PRNGKey(0), x, k,
+                                    chunks=chunks)
+    devs = jax.devices()
+    counts = [m for m in (1, 2, 4, 8) if m <= len(devs)]
+
+    def cfg(mode, backend):
+        kw = dict(max_iters=300, chunks=chunks, stop_when_frozen=True,
+                  use_kernel=True, kernel_backend=backend)
+        if mode == "minibatch":
+            kw.update(mode="minibatch", batch_chunks=b, patience=5,
+                      max_iters=600, decay=0.95)
+            return EngineConfig(**kw)
+        kw.update(use_h_stop=False)
+        return EngineConfig(**kw)
+
+    def fit(engine, mesh=None):
+        # 1e-4 trips the paired minibatch stop well before max_iters (~130
+        # iterations here), so the parity column compares real early-stop
+        # decisions, not a trivial run-to-max; full mode stops on frozen
+        # centroids (use_h_stop=False) and ignores the threshold
+        run = (lambda: engine.fit(x, c0, h_star=1e-4)) if mesh is None else \
+            (lambda: engine.fit_sharded(x, c0, mesh, h_star=1e-4))
+        res = run()                                   # compile + warm
+        jax.block_until_ready(res.labels)
+        t0 = time.time()
+        res = run()
+        jax.block_until_ready(res.labels)
+        return res, time.time() - t0
+
+    rows = []
+    baselines = {}
+    host_backend = "interpret" if jax.default_backend() == "cpu" \
+        else jax.default_backend()
+    for mode in ("full", "minibatch"):
+        for backend in (host_backend, "xla"):
+            eng = ClusteringEngine("kmeans", cfg(mode, backend))
+            for m in counts:
+                mesh = None if m == 1 else jax.make_mesh(
+                    (m,), ("data",), devices=devs[:m],
+                    axis_types=(jax.sharding.AxisType.Auto,))
+                res, wall = fit(eng, mesh)
+                key = (mode, m)
+                base = baselines.setdefault(key, res)
+                rows.append({
+                    "name": f"{mode}_{backend}_d{m}",
+                    "mode": mode, "backend": backend, "devices": m,
+                    "iters": int(res.n_iters),
+                    "j": round(float(res.objective), 1),
+                    "stop_matches_first_backend":
+                        bool(int(res.n_iters) == int(base.n_iters)),
+                    "wall_s_fit": round(wall, 3),
+                })
+
+    skipped = [m for m in (1, 2, 4, 8) if m > len(devs)]
+    if skipped:
+        print(f"# kernel_backends: only {len(devs)} device(s) visible, "
+              f"skipped counts {skipped}; NOT writing "
+              "BENCH_kernel_backends.json (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8 for the full "
+              "sweep)")
+        return rows
+    payload = {
+        "benchmark": "kernel_backends",
+        "n": n, "d": d, "k": k, "chunks": chunks, "batch_chunks": b,
+        "host_pallas_backend": host_backend,
+        "note": "device counts are XLA host-platform emulation; wall "
+                "times on CPU measure interpreter/partitioning overhead, "
+                "not accelerator scaling — the tracked claim is backend "
+                "parity (stop_matches_first_backend) per mode × device "
+                "count",
+        "rows": rows,
+    }
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_kernel_backends.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return rows
+
+
 # --------------------------------------------------------------------------
 # Roofline table (reads experiments/dryrun/*.json → §Roofline source data)
 # --------------------------------------------------------------------------

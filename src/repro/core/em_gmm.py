@@ -44,21 +44,20 @@ def log_prob(x, params: GMMParams):
 
 
 def estep_stats(x, params: GMMParams, axis_name=None, use_kernel: bool = False,
-                mask=None):
+                mask=None, kernel_backend: str | None = None):
     """Fused E-step: responsibilities → (labels, loglik, r_sum, r_x, r_x2).
 
     All M-step sufficient statistics come out of one pass over the points —
-    the same contract as the ``gmm_estep`` Pallas kernel.  ``mask``: [N] f32
-    row weights (streaming-chunk padding); jnp path only.
+    the same contract as the ``gmm_estep`` kernel op.  ``use_kernel``
+    routes through the kernel dispatch layer (``repro.kernels.dispatch``;
+    ``kernel_backend`` forces a registry backend).  ``mask``: [N] f32 row
+    weights (streaming-chunk padding) — honoured by both paths.
     """
     if use_kernel:
-        if mask is not None:
-            raise NotImplementedError(
-                "mask is handled by the kernel's chunked entry point "
-                "(gmm_estep_chunked), not by estep_stats")
         from repro.kernels.gmm_estep import ops as _gops
         labels, loglik, r_sum, r_x, r_x2 = _gops.gmm_estep(
-            x, params.means, params.var, params.log_w)
+            x, params.means, params.var, params.log_w, mask=mask,
+            backend=kernel_backend)
     else:
         lp = log_prob(x, params)                                 # [N,K]
         lse = jax.scipy.special.logsumexp(lp, axis=-1)           # [N]
@@ -68,6 +67,8 @@ def estep_stats(x, params: GMMParams, axis_name=None, use_kernel: bool = False,
             mask = mask.astype(jnp.float32)
             resp = resp * mask[:, None]
             loglik = jnp.sum(lse * mask)
+            # weight-0 rows are labelled -1 — the kernel ops' mask contract
+            labels = jnp.where(mask > 0, labels, -1)
         else:
             loglik = jnp.sum(lse)
         r_sum = jnp.sum(resp, axis=0)                            # [K]

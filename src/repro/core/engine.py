@@ -40,6 +40,14 @@ This module folds them behind a small algorithm protocol
     optionally smooths h.  The final labels pass is always a full sweep,
     so the result contract is unchanged.
 
+All three axes compose with ``use_kernel=True`` (ISSUE 4): sweeps route
+through the backend-dispatched kernel ops (``repro.kernels.dispatch`` —
+tpu/gpu Pallas, interpreter elsewhere, or the ``xla`` reference;
+``kernel_backend`` pins one).  Multi-restart rides the kernels' restart
+grid axis via their ``custom_vmap`` rules, minibatch uses the gather-free
+statically-sliced subsample driver, and the sharded drivers run the masked
+chunk layout through the same per-chunk kernel calls.
+
 Thresholds from an offline-fitted ``earlystop.LongTailModel`` enter through
 ``EngineConfig.from_longtail`` so the paper pipeline (fit h(r) once, reuse
 h* = f(r*) forever) drives the same engine.
@@ -48,6 +56,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Any, NamedTuple
 
 import jax
@@ -98,10 +107,18 @@ class KMeansAlgorithm:
         labels, sums, counts, j = _km.assign_and_stats(xc, params, mask=mask)
         return labels, (sums, counts, j)
 
-    def kernel_stats(self, x, params, chunks: int):
+    def kernel_stats(self, x, params, chunks: int, backend=None):
         from repro.kernels.kmeans_assign import ops as _kops
         labels, sums, counts, j = _kops.kmeans_assign_chunked(
-            x, params, chunks=chunks)
+            x, params, chunks=chunks, backend=backend)
+        return labels, (sums, counts, j)
+
+    def kernel_chunk_stats(self, xc, mask, params, backend=None):
+        """One masked chunk through the dispatched kernel op — the fused
+        counterpart of ``chunk_stats`` (same contract)."""
+        from repro.kernels.kmeans_assign import ops as _kops
+        labels, sums, counts, j = _kops.kmeans_assign(
+            xc, params, mask=mask, backend=backend)
         return labels, (sums, counts, j)
 
     def update(self, params, stats, n_total):
@@ -151,10 +168,20 @@ class EMAlgorithm:
             xc, params, mask=mask)
         return labels, (r_sum, r_x, r_x2, loglik)
 
-    def kernel_stats(self, x, params, chunks: int):
+    def kernel_stats(self, x, params, chunks: int, backend=None):
         from repro.kernels.gmm_estep import ops as _gops
         labels, loglik, r_sum, r_x, r_x2 = _gops.gmm_estep_chunked(
-            x, params.means, params.var, params.log_w, chunks=chunks)
+            x, params.means, params.var, params.log_w, chunks=chunks,
+            backend=backend)
+        return labels, (r_sum, r_x, r_x2, loglik)
+
+    def kernel_chunk_stats(self, xc, mask, params, backend=None):
+        """One masked chunk through the dispatched kernel op — the fused
+        counterpart of ``chunk_stats`` (same contract)."""
+        from repro.kernels.gmm_estep import ops as _gops
+        labels, loglik, r_sum, r_x, r_x2 = _gops.gmm_estep(
+            xc, params.means, params.var, params.log_w, mask=mask,
+            backend=backend)
         return labels, (r_sum, r_x, r_x2, loglik)
 
     def update(self, params, stats, n_total):
@@ -192,6 +219,18 @@ class EngineConfig:
     ``h_star`` here is the *default* threshold; ``fit`` accepts a traced
     override so sweeping thresholds does not retrace.
 
+    ``use_kernel`` routes every sweep (full, chunked, minibatch, restarts,
+    sharded) through the backend-dispatched kernel ops;
+    ``kernel_backend`` pins a registry backend ("tpu" / "gpu" /
+    "interpret" / "xla" or a custom ``register_backend`` name — see
+    ``repro.kernels.dispatch``).  ``None``/"auto" resolve to the
+    platform's default backend *at construction* (honouring an active
+    ``dispatch.force_backend``), so the concrete name is part of this
+    static config and jit caches never cross backends.  The
+    ``REPRO_FORCE_KERNEL_BACKEND`` env var reroutes every config through
+    the kernel path (the CI coverage hook; explicitly pinned backends
+    win).
+
     ``mode="minibatch"`` samples ``batch_chunks`` of the ``chunks`` pieces
     per iteration and applies learning-rate updates with forgetting factor
     ``decay`` (1.0 = pure 1/t annealing; see the module docstring).  The
@@ -209,7 +248,7 @@ class EngineConfig:
     patience: int = 1
     chunks: int = 1                 # C streaming chunks per sweep
     axis_name: Any = None           # psum stats over these mesh axes
-    use_kernel: bool = False        # route sweeps through the Pallas kernels
+    use_kernel: bool = False        # route sweeps through the kernel ops
     use_h_stop: bool = True         # apply the h_i <= h* long-tail predicate
     stop_when_frozen: bool = False  # stop when params stop moving (k-means)
     mode: str = "full"              # "full" | "minibatch"
@@ -217,12 +256,39 @@ class EngineConfig:
     decay: float = 1.0              # minibatch count forgetting factor
     seed: int = 0                   # minibatch chunk-sampling PRNG stream
     ema: float = 0.0                # minibatch h smoothing (0 = raw)
+    kernel_backend: str | None = None   # registry backend; None = auto
 
     def __post_init__(self):
+        # CI hook: REPRO_FORCE_KERNEL_BACKEND=<backend> reroutes every
+        # engine config through the kernel dispatch layer, so the whole
+        # engine suite doubles as kernel-path coverage.  An explicitly
+        # pinned kernel_backend wins over the env (backend-vs-backend
+        # parity tests keep comparing what they name).
+        forced = os.environ.get("REPRO_FORCE_KERNEL_BACKEND")
+        if forced:
+            if not self.use_kernel:
+                object.__setattr__(self, "use_kernel", True)
+            if self.kernel_backend in (None, "auto"):
+                object.__setattr__(self, "kernel_backend", forced)
         if self.mode not in ("full", "minibatch"):
             raise ValueError(f"unknown engine mode {self.mode!r}")
         if not 0.0 <= self.ema < 1.0:
             raise ValueError(f"ema must be in [0, 1); got {self.ema}")
+        if self.kernel_backend is not None and not self.use_kernel:
+            raise ValueError(
+                "kernel_backend has no effect with use_kernel=False — "
+                "pass use_kernel=True (CLI: --use-kernel) or drop it")
+        if self.use_kernel and self.kernel_backend in (None, "auto"):
+            # resolve eagerly: the concrete backend becomes part of this
+            # static (hashable) config, so the jit caches keyed on it can
+            # never reuse a trace from another backend (including under a
+            # dispatch.force_backend() active right now).  Names the
+            # registry does not know fail at the first op dispatch with
+            # the available list — custom register_backend() names are
+            # legal here.
+            from repro.kernels import dispatch as _dispatch
+            object.__setattr__(self, "kernel_backend",
+                               _dispatch.default_backend())
         if self.mode == "full":
             stray = [f"{name}={value!r}" for name, value, default in (
                 ("batch_chunks", self.batch_chunks, 0),
@@ -244,11 +310,6 @@ class EngineConfig:
                 raise ValueError(
                     "minibatch mode needs 1 <= batch_chunks < chunks; got "
                     f"batch_chunks={self.batch_chunks}, chunks={self.chunks}")
-            if self.use_kernel:
-                raise NotImplementedError(
-                    "minibatch mode gathers a traced chunk subset; the "
-                    "Pallas chunked entry points need static slices — "
-                    "use use_kernel=False with mode='minibatch'")
             if not 0.0 < self.decay <= 1.0:
                 raise ValueError(f"decay must be in (0, 1]; got {self.decay}")
 
@@ -281,16 +342,30 @@ class RestartResult(NamedTuple):
 _chunk_points = _km.chunk_points
 
 
+def _chunk_stats_fn(alg, config: EngineConfig):
+    """The per-chunk masked stats pass: jnp ``chunk_stats`` or the
+    dispatched kernel op, per ``config.use_kernel`` / ``kernel_backend``."""
+    if config.use_kernel:
+        return functools.partial(alg.kernel_chunk_stats,
+                                 backend=config.kernel_backend)
+    return alg.chunk_stats
+
+
 def _sweep_chunked(alg, config: EngineConfig, xc, mask, params,
                    with_labels: bool):
     """One full pass over a pre-chunked [C, P, D] layout (+ [C, P] mask)
     → (labels [C, P] | None, sufficient stats), stats psum'd over
     ``axis_name``.  This is the layout the sharded drivers hand each shard
     (its row-slice of every global chunk); labels stay in chunk layout so
-    callers can shard/flatten/strip-padding as they need."""
+    callers can shard/flatten/strip-padding as they need.  With
+    ``use_kernel`` each chunk runs through the dispatched kernel op (the
+    mask operand carries the padding), so the sharded drivers serve both
+    paths."""
+    chunk_stats = _chunk_stats_fn(alg, config)
+
     def body(acc, inp):
         xi, mi = inp
-        lab, st = alg.chunk_stats(xi, mi, params)
+        lab, st = chunk_stats(xi, mi, params)
         acc = jax.tree.map(jnp.add, acc, st)
         return acc, (lab if with_labels else jnp.zeros((), jnp.int32))
 
@@ -305,12 +380,13 @@ def _sweep(alg, config: EngineConfig, x, params, with_labels: bool):
     """One full pass over the points → (labels | None, sufficient stats).
 
     chunks=1 runs the monolithic fused pass; chunks>1 streams via lax.scan
-    (pure-JAX path) or via the kernels' chunked entry points (fused path,
-    static slices — each chunk keeps the kernel's own n_valid masking).
-    Stats are psum'd over ``axis_name`` once per sweep.
+    (pure-JAX path) or via the dispatched ops' chunked entry points (fused
+    path, static slices; ``config.kernel_backend`` pins a registry
+    backend).  Stats are psum'd over ``axis_name`` once per sweep.
     """
     if config.use_kernel:
-        labels, stats = alg.kernel_stats(x, params, config.chunks)
+        labels, stats = alg.kernel_stats(x, params, config.chunks,
+                                         backend=config.kernel_backend)
         if not with_labels:
             labels = None
     elif config.chunks <= 1:
@@ -331,12 +407,15 @@ def _sweep(alg, config: EngineConfig, x, params, with_labels: bool):
     return labels, stats
 
 
-def _minibatch_draw(config: EngineConfig, xc, mask, key):
-    """Draw B-of-C chunks without replacement → (xb [B,P,D], mb [B,P]).
+def _minibatch_draw(config: EngineConfig, mask, key):
+    """Draw B-of-C chunk *indices* without replacement → idx [B] i32.
 
-    Separated from the stats pass so the paired Eq. 7 evaluation reuses the
-    SAME gathered batch structurally (one gather per iteration), rather than
-    leaning on PRNG determinism + XLA CSE to dedup a second draw.
+    Only indices: the stats pass dynamic-slices each drawn chunk out of the
+    resident [C, P, D] layout, so the [B, P, D] gathered copy never
+    materialises and the kernel ops see statically-shaped chunks.  The
+    paired Eq. 7 evaluation reuses the SAME drawn indices structurally
+    (one draw per iteration), rather than leaning on PRNG determinism +
+    XLA CSE to dedup a second draw.
     """
     if mask.shape[0] <= config.batch_chunks:
         # chunk_points clamps C to the row count; fail with the engine's
@@ -346,21 +425,23 @@ def _minibatch_draw(config: EngineConfig, xc, mask, key):
             f"the data only splits into {mask.shape[0]} chunk(s) "
             f"(batch_chunks={config.batch_chunks}, chunks={config.chunks}); "
             "reduce batch_chunks or use mode='full' at this scale")
-    idx = jax.random.choice(key, mask.shape[0],
-                            shape=(config.batch_chunks,), replace=False)
-    return xc[idx], mask[idx]
+    return jax.random.choice(key, mask.shape[0],
+                             shape=(config.batch_chunks,), replace=False)
 
 
-def _minibatch_stats(alg, config: EngineConfig, xb, mb, params):
-    """Masked ``chunk_stats`` scan over a drawn batch → (stats, n_batch) —
-    the same accumulation as the full sweep, over N·B/C points only."""
-    def body(acc, inp):
-        xi, mi = inp
-        _, st = alg.chunk_stats(xi, mi, params)
-        return jax.tree.map(jnp.add, acc, st), None
+def _minibatch_stats(alg, config: EngineConfig, xc, mask, idx, params):
+    """Masked stats over the drawn chunks → (stats, n_batch) — the same
+    accumulation as the full sweep, over N·B/C points only, via the shared
+    gather-free subsample driver (``kernels.layout.subsampled_stats``)."""
+    from repro.kernels.layout import subsampled_stats
+    chunk_stats = _chunk_stats_fn(alg, config)
 
-    stats, _ = jax.lax.scan(body, alg.zero_stats(params), (xb, mb))
-    n_batch = jnp.sum(mb)
+    def call(xi, mi):
+        _, st = chunk_stats(xi, mi, params)
+        return st
+
+    stats, n_batch = subsampled_stats(call, alg.zero_stats(params),
+                                      xc, mask, idx)
     if config.axis_name is not None:
         stats = jax.tree.map(
             lambda a: jax.lax.psum(a, config.axis_name), stats)
@@ -370,8 +451,8 @@ def _minibatch_stats(alg, config: EngineConfig, xb, mb, params):
 
 def _minibatch_sweep(alg, config: EngineConfig, xc, mask, params, key):
     """draw + stats in one call (kept for tests / external callers)."""
-    xb, mb = _minibatch_draw(config, xc, mask, key)
-    return _minibatch_stats(alg, config, xb, mb, params)
+    idx = _minibatch_draw(config, mask, key)
+    return _minibatch_stats(alg, config, xc, mask, idx, params)
 
 
 def _global_n(x, config: EngineConfig):
@@ -434,8 +515,9 @@ def _fit_loop(alg, config: EngineConfig, params0, h_star, n_total, sweep,
     def body(s: _State):
         if minibatch:
             key, sub = jax.random.split(s.key)
-            xb, mb = _minibatch_draw(config, xc, mask, sub)
-            stats, n_batch = _minibatch_stats(alg, config, xb, mb, s.params)
+            idx = _minibatch_draw(config, mask, sub)
+            stats, n_batch = _minibatch_stats(alg, config, xc, mask, idx,
+                                              s.params)
             j_old = alg.objective(stats) / jnp.maximum(n_batch, 1.0)
             new_params, carry = alg.minibatch_update(
                 s.params, stats, s.carry, n_batch, config.decay)
@@ -446,7 +528,7 @@ def _fit_loop(alg, config: EngineConfig, params0, h_star, n_total, sweep,
             # when the h predicate is off (the pairing is a second distance
             # pass; don't pay it for a value nothing reads).
             if config.use_h_stop:
-                stats2, _ = _minibatch_stats(alg, config, xb, mb,
+                stats2, _ = _minibatch_stats(alg, config, xc, mask, idx,
                                              new_params)
                 j = alg.objective(stats2) / jnp.maximum(n_batch, 1.0)
                 h = jnp.abs(j - j_old) / jnp.maximum(jnp.abs(j_old), _EPS)
@@ -563,9 +645,9 @@ def _restart_loop(alg, config: EngineConfig, params0, h_star, n_total,
     if minibatch:
         xc, mask = mb_data
         mb_draw_v = jax.vmap(
-            lambda kk: _minibatch_draw(config, xc, mask, kk))
+            lambda kk: _minibatch_draw(config, mask, kk))
         mb_stats_v = jax.vmap(
-            lambda xb, mb, p: _minibatch_stats(alg, config, xb, mb, p))
+            lambda idx, p: _minibatch_stats(alg, config, xc, mask, idx, p))
         mb_update_v = jax.vmap(
             lambda p, st, cv, nb: alg.minibatch_update(p, st, cv, nb,
                                                        config.decay))
@@ -594,14 +676,14 @@ def _restart_loop(alg, config: EngineConfig, params0, h_star, n_total,
         if minibatch:
             split = jax.vmap(jax.random.split)(s.keys)      # [R, 2, 2]
             keys, subs = split[:, 0], split[:, 1]
-            xb, mb = mb_draw_v(subs)                        # [R, B, P, ...]
-            stats, n_batch = mb_stats_v(xb, mb, s.params)
+            idx = mb_draw_v(subs)                           # [R, B] indices
+            stats, n_batch = mb_stats_v(idx, s.params)
             j_old = objective_v(stats) / jnp.maximum(n_batch, 1.0)
             new_params, carry = mb_update_v(s.params, stats, s.carry,
                                             n_batch)
             # paired h on the same per-restart subsample (see _fit)
             if config.use_h_stop:
-                stats2, _ = mb_stats_v(xb, mb, new_params)
+                stats2, _ = mb_stats_v(idx, new_params)
                 j = objective_v(stats2) / jnp.maximum(n_batch, 1.0)
                 h = (jnp.abs(j - j_old)
                      / jnp.maximum(jnp.abs(j_old), _EPS)).astype(jnp.float32)
@@ -744,13 +826,6 @@ class ClusteringEngine:
                 raise ValueError(
                     "fit_restarts needs params0 or (key, k, restarts)")
             params0 = self.init_restarts(key, x, k, restarts)
-        if self.config.use_kernel:
-            raise NotImplementedError(
-                "fit_restarts(use_kernel=True): the Pallas kmeans_assign/"
-                "gmm_estep kernels have no vmap batching rule yet, so the "
-                "vmapped multi-restart program cannot route through them; "
-                "use use_kernel=False for fit_restarts (single-restart "
-                "fit() still takes the kernel path)")
         hs = self.config.h_star if h_star is None else h_star
         return _fit_restarts(x, params0, jnp.asarray(hs, jnp.float32),
                              self.algorithm, self.config)
@@ -767,12 +842,6 @@ class ClusteringEngine:
         from repro.distribution.sharding import (chunked_points_spec,
                                                  mesh_axes,
                                                  shard_chunked_points)
-        if self.config.use_kernel:
-            raise NotImplementedError(
-                "the sharded drivers stream through the jnp chunk_stats "
-                "path (masked [C, P, D] layout); the Pallas entry points "
-                "have no row-sharded variant yet — use use_kernel=False "
-                "with fit_sharded / fit_restarts_sharded")
         dp, _, _ = mesh_axes(mesh)
         if not dp:
             raise ValueError(

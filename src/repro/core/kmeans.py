@@ -27,21 +27,21 @@ import jax.numpy as jnp
 
 
 def assign_and_stats(x, centroids, axis_name=None, use_kernel: bool = False,
-                     mask=None):
+                     mask=None, kernel_backend: str | None = None):
     """Fused assignment pass.
 
     Returns (labels [N] int32, sums [K,D] f32, counts [K] f32, j []).
     ``axis_name``: psum the statistics over those mesh axes (shard_map mode).
-    ``use_kernel``: route through the Pallas kernel (TPU target; interpret on CPU).
-    ``mask``: [N] f32 row weights (streaming-chunk padding); jnp path only.
+    ``use_kernel``: route through the kernel dispatch layer
+    (``repro.kernels.dispatch``: tpu/gpu Pallas, interpret elsewhere;
+    ``kernel_backend`` forces a registry backend).
+    ``mask``: [N] f32 row weights (streaming-chunk padding) — honoured by
+    both the jnp and the kernel path (the kernels take a weight operand).
     """
     if use_kernel:
-        if mask is not None:
-            raise NotImplementedError(
-                "mask is handled by the kernel's chunked entry point "
-                "(kmeans_assign_chunked), not by assign_and_stats")
         from repro.kernels.kmeans_assign import ops as _kops
-        labels, sums, counts, j = _kops.kmeans_assign(x, centroids)
+        labels, sums, counts, j = _kops.kmeans_assign(
+            x, centroids, mask=mask, backend=kernel_backend)
     else:
         x = x.astype(jnp.float32)
         c = centroids.astype(jnp.float32)
@@ -60,6 +60,8 @@ def assign_and_stats(x, centroids, axis_name=None, use_kernel: bool = False,
             j = jnp.sum(mind2 * mask)
             sums = jnp.zeros_like(c).at[labels].add(x * mask[:, None])
             counts = jnp.zeros((k,), jnp.float32).at[labels].add(mask)
+            # weight-0 rows are labelled -1 — the kernel ops' mask contract
+            labels = jnp.where(mask > 0, labels, -1)
     if axis_name is not None:
         sums = jax.lax.psum(sums, axis_name)
         counts = jax.lax.psum(counts, axis_name)
@@ -114,22 +116,12 @@ def kmeans_step(x, centroids, axis_name=None, use_kernel: bool = False):
 
 
 # --------------------------------------------------------------------------
-# Chunk layout (shared by the engine's streaming sweep and the ++ init)
+# Chunk layout (shared by the engine's streaming sweep and the ++ init) —
+# one copy in kernels.layout since ISSUE 4, re-exported from its
+# historical home here.
 # --------------------------------------------------------------------------
 
-def chunk_points(x, chunks: int):
-    """[N, D] → ([C, ceil(N/C), D], mask [C, ceil(N/C)]) with zero-padding.
-
-    Row-major: global row i lives at chunk i // per, slot i % per.  The mask
-    is 1.0 for real rows, 0.0 for padding.
-    """
-    n, d = x.shape
-    c = max(1, min(int(chunks), n))
-    per = -(-n // c)
-    pad = c * per - n
-    xp = jnp.pad(x, ((0, pad), (0, 0)))
-    mask = (jnp.arange(c * per) < n).astype(jnp.float32).reshape(c, per)
-    return xp.reshape(c, per, d), mask
+from repro.kernels.layout import chunk_points  # noqa: E402,F401
 
 
 # --------------------------------------------------------------------------

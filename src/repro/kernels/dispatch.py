@@ -1,0 +1,199 @@
+"""Backend-dispatching layer for the kernel packages (ISSUE 4).
+
+One registry replaces the old two-state world ("TPU-compiled or
+CPU-interpret") that each ``ops.py`` re-implemented privately.  An op is a
+named :class:`KernelOp` with one implementation per backend:
+
+  · ``tpu``       — Pallas, compiled for the TPU (Mosaic lowering)
+  · ``gpu``       — Pallas, Triton lowering with the GPU tile policy
+  · ``interpret`` — the same Pallas kernel run by the interpreter (any
+                    host; this is what CPU CI exercises)
+  · ``xla``       — the pure-jnp reference contract (always available;
+                    also the numerically-independent parity oracle)
+
+Resolution order for a call: an explicit ``backend=`` argument → the
+process-wide :func:`force_backend` override → the default mapping from
+``jax.default_backend()`` (tpu → ``tpu``, gpu → ``gpu``, anything else →
+``interpret``).  Resolution happens *before* any jit boundary, so the
+chosen backend is a static argument and switching backends never reuses a
+stale trace.
+
+Tests (and downstream tooling) can force any path per op with
+:func:`register_backend` / :func:`force_backend` — that is how the parity
+goldens pin kernel-vs-reference on every backend available in CI.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+
+import jax
+import jax.numpy as jnp
+
+PALLAS_BACKENDS = ("tpu", "gpu", "interpret")
+KNOWN_BACKENDS = PALLAS_BACKENDS + ("xla",)
+
+_STATE = threading.local()
+
+
+def default_backend() -> str:
+    """Map ``jax.default_backend()`` onto a registry backend name."""
+    forced = getattr(_STATE, "forced", None)
+    if forced is not None:
+        return forced
+    jb = jax.default_backend()
+    if jb in ("tpu", "gpu"):
+        return jb
+    return "interpret"
+
+
+def resolve_backend(backend: str | None = None,
+                    interpret: bool | None = None) -> str:
+    """Normalise the public ops' ``backend=`` / legacy ``interpret=`` args.
+
+    ``interpret=True`` is the historical way to force the interpreter;
+    ``interpret=False`` forces the compiled Pallas path for the current
+    platform.  ``backend`` (a registry name) wins when both are given.
+    """
+    if backend is not None:
+        if backend == "auto":
+            return default_backend()
+        # custom names registered via register_backend are legal; a name no
+        # op knows fails at the per-op lookup with the available list
+        return backend
+    if interpret is True:
+        return "interpret"
+    if interpret is False:
+        jb = jax.default_backend()
+        if jb in ("tpu", "gpu"):
+            return jb
+        raise ValueError(
+            "interpret=False requests the compiled Pallas path, but "
+            f"jax.default_backend()={jb!r} has no Pallas lowering here; "
+            "pass backend='interpret' / 'xla' instead")
+    return default_backend()
+
+
+@contextlib.contextmanager
+def force_backend(name: str):
+    """Force every dispatched op onto ``name`` within the context (tests).
+
+    Custom names installed via :func:`register_backend` are legal; forcing
+    a name an op has not registered fails at that op's lookup with the
+    available list.
+    """
+    prev = getattr(_STATE, "forced", None)
+    _STATE.forced = name
+    try:
+        yield
+    finally:
+        _STATE.forced = prev
+
+
+class KernelOp:
+    """A named op with per-backend implementations.
+
+    Implementations share one internal contract per op (the op's ``ops.py``
+    documents it); ``__call__`` resolves the backend name and forwards.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self._impls: dict[str, object] = {}
+
+    def register(self, backend: str):
+        def deco(fn):
+            self._impls[backend] = fn
+            return fn
+        return deco
+
+    def backends(self) -> tuple[str, ...]:
+        return tuple(sorted(self._impls))
+
+    def impl(self, backend: str | None = None, interpret: bool | None = None):
+        """Resolve → (backend_name, implementation)."""
+        b = resolve_backend(backend, interpret)
+        if b not in self._impls:
+            raise NotImplementedError(
+                f"kernel op {self.name!r} has no {b!r} backend registered "
+                f"(available: {self.backends()}); register one with "
+                f"repro.kernels.dispatch.register_backend({self.name!r}, "
+                f"{b!r}, fn)")
+        return b, self._impls[b]
+
+    def __call__(self, *args, backend: str | None = None,
+                 interpret: bool | None = None, **kw):
+        _, fn = self.impl(backend, interpret)
+        return fn(*args, **kw)
+
+
+_OPS: dict[str, KernelOp] = {}
+
+
+def get_op(name: str) -> KernelOp:
+    op = _OPS.get(name)
+    if op is None:
+        op = _OPS[name] = KernelOp(name)
+    return op
+
+
+def register_backend(op_name: str, backend: str, fn=None):
+    """Register (or override) ``fn`` as ``op_name``'s ``backend`` impl.
+
+    Usable as a direct call or as a decorator::
+
+        @register_backend("kmeans_assign", "mybackend")
+        def my_impl(x, w, c, *, block_n): ...
+
+    Tests use this hook to force any path (including fakes) through the
+    public ops without monkeypatching module internals.
+    """
+    op = get_op(op_name)
+    if fn is None:
+        return op.register(backend)
+    op.register(backend)(fn)
+    return fn
+
+
+def registered_ops() -> dict[str, tuple[str, ...]]:
+    """{op name: registered backends} — the README support matrix's source."""
+    return {name: op.backends() for name, op in sorted(_OPS.items())}
+
+
+def make_dispatched_factory(op: KernelOp, n_out: int):
+    """The restart-axis ``custom_vmap`` scaffolding, shared by the
+    clustering ops (one copy of the broadcast rule — it must not drift
+    between kmeans_assign and gmm_estep).
+
+    Returns an lru-cached factory ``(block_n, backend) → callable`` where
+    the callable takes ``(x, w, *params)`` arrays and re-resolves the
+    registry impl on every call (so ``register_backend`` overrides
+    installed later still win).  The vmap rule maps a batched call onto
+    the kernels' leading restart axis: batched operands arrive with the
+    batch axis at 0; unbatched params (and ``w`` when only the points are
+    batched) are broadcast so the impl sees one consistent [R, ...]
+    contract.
+    """
+
+    @functools.lru_cache(maxsize=None)
+    def factory(block_n: int, backend: str):
+        def call(x, w, *params):
+            _, fn = op.impl(backend)
+            return fn(x, w, *params, block_n=block_n)
+
+        cv = jax.custom_batching.custom_vmap(call)
+
+        @cv.def_vmap
+        def _rule(axis_size, in_batched, x, w, *params):
+            params = tuple(
+                p if batched else jnp.broadcast_to(p,
+                                                   (axis_size,) + p.shape)
+                for p, batched in zip(params, in_batched[2:]))
+            if x.ndim == 3 and w.ndim == 1:
+                w = jnp.broadcast_to(w, (axis_size,) + w.shape)
+            return call(x, w, *params), (True,) * n_out
+
+        return cv
+
+    return factory

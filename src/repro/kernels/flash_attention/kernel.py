@@ -1,5 +1,6 @@
-"""Flash attention Pallas kernel (TPU target) — GQA, causal / sliding-window /
-bidirectional, online softmax.
+"""Flash attention Pallas kernel (dispatched per backend by ``ops.py`` —
+TPU compiled, Triton on GPU, interpreter elsewhere) — GQA, causal /
+sliding-window / bidirectional, online softmax.
 
 Grid: (batch, q_heads, n_q_blocks, n_kv_blocks); the kv dimension is the
 innermost (sequential on TPU) so the online-softmax state for one q tile

@@ -1,15 +1,23 @@
-"""Fused diagonal-GMM E-step Pallas kernel (TPU target).
+"""Fused diagonal-GMM E-step Pallas kernel (TPU compiled / Triton on GPU /
+interpreter elsewhere — ``ops.py`` dispatches via ``kernels.dispatch``).
 
 Per tile of points, computes component log-densities via the matmul
 decomposition  lp = const_k − 0.5·x²·(1/σ²)ᵀ + x·(μ/σ²)ᵀ,  then log-sum-exp,
 responsibilities, labels, and ALL M-step sufficient statistics (Σr, Σr·x,
 Σr·x²) — one HBM read of the points per EM iteration instead of four.
 
-ops.py pre-computes the [K,D] operand matrices and the per-component constant
-(log w − ½(Σμ²/σ² + Σlog σ² + D·log 2π)), and pads:
-  D → ×128 with inv_var = 0 (padded dims contribute nothing),
-  K → ×8 with const = −1e30 (zero responsibility),
-  N → ×block_n, masked by static n_valid.
+Grid: ``(R, N // block_n)`` with a leading restart axis (see the
+kmeans_assign kernel header; same contract: points/weights shared or
+per-restart, parameters per-restart, R = 1 for single fits).  Row validity
+is the ``w`` mask operand.  ``accumulate=False`` writes per-step partials
+for parallel-grid (GPU) backends; the wrapper sums them.
+
+ops.py pre-computes the [R,K,D] operand matrices and the per-component
+constant (log w − ½(Σμ²/σ² + Σlog σ² + D·log 2π)), and pads per the
+backend's ``layout.TilePolicy``:
+  D → lane multiple with inv_var = 0 (padded dims contribute nothing),
+  K → sublane multiple with const = −1e30 (zero responsibility),
+  N → ×block_n with weight 0.
 """
 from __future__ import annotations
 
@@ -20,23 +28,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, a_ref, b_ref, const_ref,
+def _kernel(x_ref, w_ref, a_ref, b_ref, const_ref,
             labels_ref, loglik_ref, rsum_ref, rx_ref, rx2_ref,
-            *, n_valid: int, block_n: int):
-    step = pl.program_id(0)
+            *, accumulate: bool):
+    step = pl.program_id(1)
 
-    @pl.when(step == 0)
-    def _init():
-        loglik_ref[...] = jnp.zeros_like(loglik_ref)
-        rsum_ref[...] = jnp.zeros_like(rsum_ref)
-        rx_ref[...] = jnp.zeros_like(rx_ref)
-        rx2_ref[...] = jnp.zeros_like(rx2_ref)
+    if accumulate:
+        @pl.when(step == 0)
+        def _init():
+            loglik_ref[...] = jnp.zeros_like(loglik_ref)
+            rsum_ref[...] = jnp.zeros_like(rsum_ref)
+            rx_ref[...] = jnp.zeros_like(rx_ref)
+            rx2_ref[...] = jnp.zeros_like(rx2_ref)
 
-    x = x_ref[...].astype(jnp.float32)        # [T, D]
-    a = a_ref[...]                            # [K, D] = 1/σ²
-    b = b_ref[...]                            # [K, D] = μ/σ²
-    const = const_ref[...]                    # [K]
-    t = x.shape[0]
+    x = x_ref[0].astype(jnp.float32)          # [T, D]
+    w = w_ref[0].astype(jnp.float32)          # [T]
+    a = a_ref[0]                              # [K, D] = 1/σ²
+    b = b_ref[0]                              # [K, D] = μ/σ²
+    const = const_ref[0]                      # [K]
 
     xx = x * x
     lp = (const[None, :]
@@ -49,47 +58,89 @@ def _kernel(x_ref, a_ref, b_ref, const_ref,
     lse = (m + jnp.log(s))[:, 0]                             # [T]
     resp = e / s                                             # [T, K]
     labels = jnp.argmax(lp, axis=-1).astype(jnp.int32)
-
-    rows = jax.lax.broadcasted_iota(jnp.int32, (t, 1), 0)[:, 0]
-    valid = (step * block_n + rows) < n_valid
-    w = valid.astype(jnp.float32)
+    valid = w > 0.0
     respw = resp * w[:, None]
 
-    labels_ref[...] = jnp.where(valid, labels, -1)
-    loglik_ref[...] += jnp.sum(lse * w)[None]
-    rsum_ref[...] += jnp.sum(respw, axis=0)
-    rx_ref[...] += jax.lax.dot(respw.T, x, preferred_element_type=jnp.float32)
-    rx2_ref[...] += jax.lax.dot(respw.T, xx, preferred_element_type=jnp.float32)
+    labels_ref[...] = jnp.where(valid, labels, -1)[None]
+    ll_blk = jnp.sum(lse * w)
+    rsum_blk = jnp.sum(respw, axis=0)
+    rx_blk = jax.lax.dot(respw.T, x, preferred_element_type=jnp.float32)
+    rx2_blk = jax.lax.dot(respw.T, xx, preferred_element_type=jnp.float32)
+    if accumulate:
+        loglik_ref[...] += ll_blk[None, None]
+        rsum_ref[...] += rsum_blk[None]
+        rx_ref[...] += rx_blk[None]
+        rx2_ref[...] += rx2_blk[None]
+    else:                                    # per-step partials (GPU)
+        loglik_ref[...] = ll_blk[None, None, None]
+        rsum_ref[...] = rsum_blk[None, None]
+        rx_ref[...] = rx_blk[None, None]
+        rx2_ref[...] = rx2_blk[None, None]
 
 
-def gmm_estep_kernel(x, a, b, const, *, n_valid: int, block_n: int = 1024,
-                     interpret: bool = False):
-    n, d = x.shape
-    k = a.shape[0]
-    assert n % block_n == 0
-    grid = (n // block_n,)
+def gmm_estep_kernel(x, w, a, b, const, *, block_n: int = 1024,
+                     interpret: bool = False, accumulate: bool = True):
+    """Padded operands → fused E-step stats over a (restarts, rows) grid.
+
+    x [Rx, Npad, Dpad], w [Rw, Npad], a/b [R, Kpad, Dpad], const [R, Kpad]
+    (Rx, Rw ∈ {1, R}).  Returns (labels [R, Npad], loglik, r_sum, r_x,
+    r_x2) with reduction outputs [R, ...] when ``accumulate`` else
+    per-step partials [R, S, ...].
+    """
+    rx_, n, d = x.shape
+    rw = w.shape[0]
+    r, k, _ = a.shape
+    assert n % block_n == 0, (n, block_n)
+    assert rx_ in (1, r) and rw in (1, r), (rx_, rw, r)
+    s = n // block_n
+    grid = (r, s)
+    xi = (lambda ri, i: (ri, i, 0)) if rx_ == r and r > 1 \
+        else (lambda ri, i: (0, i, 0))
+    wi = (lambda ri, i: (ri, i)) if rw == r and r > 1 \
+        else (lambda ri, i: (0, i))
+    if accumulate:
+        red_specs = [
+            pl.BlockSpec((1, 1), lambda ri, i: (ri, 0)),         # loglik
+            pl.BlockSpec((1, k), lambda ri, i: (ri, 0)),         # r_sum
+            pl.BlockSpec((1, k, d), lambda ri, i: (ri, 0, 0)),   # r_x
+            pl.BlockSpec((1, k, d), lambda ri, i: (ri, 0, 0)),   # r_x2
+        ]
+        red_shapes = [
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, k), jnp.float32),
+            jax.ShapeDtypeStruct((r, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((r, k, d), jnp.float32),
+        ]
+    else:
+        red_specs = [
+            pl.BlockSpec((1, 1, 1), lambda ri, i: (ri, i, 0)),
+            pl.BlockSpec((1, 1, k), lambda ri, i: (ri, i, 0)),
+            pl.BlockSpec((1, 1, k, d), lambda ri, i: (ri, i, 0, 0)),
+            pl.BlockSpec((1, 1, k, d), lambda ri, i: (ri, i, 0, 0)),
+        ]
+        red_shapes = [
+            jax.ShapeDtypeStruct((r, s, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, s, k), jnp.float32),
+            jax.ShapeDtypeStruct((r, s, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((r, s, k, d), jnp.float32),
+        ]
     return pl.pallas_call(
-        functools.partial(_kernel, n_valid=n_valid, block_n=block_n),
+        functools.partial(_kernel, accumulate=accumulate),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
-            pl.BlockSpec((k, d), lambda i: (0, 0)),
-            pl.BlockSpec((k, d), lambda i: (0, 0)),
-            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1, block_n, d), xi),
+            pl.BlockSpec((1, block_n), wi),
+            pl.BlockSpec((1, k, d), lambda ri, i: (ri, 0, 0)),
+            pl.BlockSpec((1, k, d), lambda ri, i: (ri, 0, 0)),
+            pl.BlockSpec((1, k), lambda ri, i: (ri, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (0,)),
-            pl.BlockSpec((k,), lambda i: (0,)),
-            pl.BlockSpec((k, d), lambda i: (0, 0)),
-            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, block_n), lambda ri, i: (ri, i)),
+            *red_specs,
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n,), jnp.int32),
-            jax.ShapeDtypeStruct((1,), jnp.float32),
-            jax.ShapeDtypeStruct((k,), jnp.float32),
-            jax.ShapeDtypeStruct((k, d), jnp.float32),
-            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((r, n), jnp.int32),
+            *red_shapes,
         ],
         interpret=interpret,
-    )(x, a, b, const)
+    )(x, w, a, b, const)

@@ -1,19 +1,33 @@
-"""Fused k-means assignment Pallas kernel (TPU target).
+"""Fused k-means assignment Pallas kernel (TPU compiled / Triton on GPU /
+interpreter elsewhere — ``ops.py`` dispatches via ``kernels.dispatch``).
 
 One pass over the points produces labels, per-cluster sums/counts and the
 objective J.  The unfused baseline reads X three times (assign, accumulate,
 objective); fusing gives arithmetic intensity ≈ 2K FLOP/byte on the distance
 matmul plus the one-hot accumulation matmul — both MXU work.
 
-Blocking: grid over N; each step holds an [T_N, D] tile of points plus the
-full [K, D] centroid block in VMEM.  Reduction outputs (sums/counts/J) use a
-constant index_map so every grid step accumulates into the same VMEM block
-(TPU grids execute sequentially → safe accumulation).
+Grid: ``(R, N // block_n)`` — a leading **restart axis** so vmapped
+multi-restart programs map onto the grid instead of needing a pallas-level
+batching rule (``ops.py`` installs a ``custom_vmap`` that routes here).
+R = 1 recovers the single-restart sweep.  The points (and their row-weight
+mask) may be shared across restarts (index map pins their restart block to
+0) or per-restart (minibatch draws differ per restart).
 
-Shapes are pre-padded by ops.py: D→mult of 128 (lanes), K→mult of 8
-(sublanes), N→mult of block_n.  Padded centroid rows are +1e9 so no point
-selects them; padded points are masked out of sums/counts/J via the
-statically-known n_valid.
+Row validity is a **mask operand** ``w`` (f32 row weights; 0 = padding),
+replacing the old static ``n_valid`` — the same kernel now serves flat
+sweeps, the engine's padded ``[C, P, D]`` chunk layout, and dynamically
+drawn minibatch chunks without recompiling per remainder.
+
+Accumulation: TPU grids execute sequentially with the last axis innermost,
+so for ``accumulate=True`` the reduction outputs use a constant (per-r)
+index map and every N-step accumulates into the same VMEM block, re-zeroed
+at step 0 of each restart.  GPU (Triton) grid cells are parallel CTAs, so
+``accumulate=False`` instead writes per-step partials ``[R, S, ...]`` that
+the wrapper reduces with one ``jnp.sum`` — the standard split reduction.
+
+Shapes are pre-padded by ops.py per the backend's ``layout.TilePolicy``;
+padded centroid rows are +1e9 so no point selects them; padded point rows
+carry weight 0.
 """
 from __future__ import annotations
 
@@ -24,18 +38,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, c_ref, labels_ref, sums_ref, counts_ref, j_ref,
-            *, n_valid: int, block_n: int):
-    step = pl.program_id(0)
+def _kernel(x_ref, w_ref, c_ref, labels_ref, sums_ref, counts_ref, j_ref,
+            *, accumulate: bool):
+    step = pl.program_id(1)
 
-    @pl.when(step == 0)
-    def _init():
-        sums_ref[...] = jnp.zeros_like(sums_ref)
-        counts_ref[...] = jnp.zeros_like(counts_ref)
-        j_ref[...] = jnp.zeros_like(j_ref)
+    if accumulate:
+        @pl.when(step == 0)
+        def _init():
+            sums_ref[...] = jnp.zeros_like(sums_ref)
+            counts_ref[...] = jnp.zeros_like(counts_ref)
+            j_ref[...] = jnp.zeros_like(j_ref)
 
-    x = x_ref[...].astype(jnp.float32)            # [T, D]
-    c = c_ref[...].astype(jnp.float32)            # [K, D]
+    x = x_ref[0].astype(jnp.float32)              # [T, D]
+    w = w_ref[0].astype(jnp.float32)              # [T]
+    c = c_ref[0].astype(jnp.float32)              # [K, D]
     t, _ = x.shape
     k = c.shape[0]
 
@@ -47,48 +63,83 @@ def _kernel(x_ref, c_ref, labels_ref, sums_ref, counts_ref, j_ref,
 
     labels = jnp.argmin(d2, axis=-1).astype(jnp.int32)           # [T]
     mind2 = jnp.maximum(jnp.min(d2, axis=-1), 0.0)               # [T]
+    valid = w > 0.0
 
-    # mask out padded points (row index ≥ n_valid); 2D iota for TPU
-    rows = jax.lax.broadcasted_iota(jnp.int32, (t, 1), 0)[:, 0]
-    valid = (step * block_n + rows) < n_valid                    # [T] bool
-    w = valid.astype(jnp.float32)
-
-    labels_ref[...] = jnp.where(valid, labels, -1)
-    j_ref[...] += jnp.sum(mind2 * w)[None]
-
+    labels_ref[...] = jnp.where(valid, labels, -1)[None]
     cols = jax.lax.broadcasted_iota(jnp.int32, (t, k), 1)
     onehot = (labels[:, None] == cols).astype(jnp.float32) * w[:, None]
-    sums_ref[...] += jax.lax.dot(onehot.T, x,                    # [K, D] MXU
-                                 preferred_element_type=jnp.float32)
-    counts_ref[...] += jnp.sum(onehot, axis=0)
+    j_blk = jnp.sum(mind2 * w)
+    sums_blk = jax.lax.dot(onehot.T, x,                          # [K, D] MXU
+                           preferred_element_type=jnp.float32)
+    counts_blk = jnp.sum(onehot, axis=0)
+    if accumulate:
+        j_ref[...] += j_blk[None, None]
+        sums_ref[...] += sums_blk[None]
+        counts_ref[...] += counts_blk[None]
+    else:                                        # per-step partials (GPU)
+        j_ref[...] = j_blk[None, None, None]
+        sums_ref[...] = sums_blk[None, None]
+        counts_ref[...] = counts_blk[None, None]
 
 
-def kmeans_assign_kernel(x: jnp.ndarray, centroids: jnp.ndarray, *,
-                         n_valid: int, block_n: int = 1024,
-                         interpret: bool = False):
-    """Padded inputs → (labels [N], sums [K,D], counts [K], j [1])."""
-    n, d = x.shape
-    k = centroids.shape[0]
+def kmeans_assign_kernel(x, w, centroids, *, block_n: int = 1024,
+                         interpret: bool = False, accumulate: bool = True):
+    """Padded inputs → fused stats over a (restarts, row-blocks) grid.
+
+    x [Rx, Npad, Dpad] (Rx ∈ {1, R}: shared or per-restart points),
+    w [Rw, Npad] row weights, centroids [R, Kpad, Dpad].  Returns
+    (labels [R, Npad] i32, sums, counts, j) — reduction outputs are
+    [R, ...] when ``accumulate`` else per-step partials [R, S, ...] for the
+    wrapper to sum (parallel-grid backends).
+    """
+    rx, n, d = x.shape
+    rw = w.shape[0]
+    r, k, _ = centroids.shape
     assert n % block_n == 0, (n, block_n)
-    grid = (n // block_n,)
+    assert rx in (1, r) and rw in (1, r), (rx, rw, r)
+    s = n // block_n
+    grid = (r, s)
+    xi = (lambda ri, i: (ri, i, 0)) if rx == r and r > 1 \
+        else (lambda ri, i: (0, i, 0))
+    wi = (lambda ri, i: (ri, i)) if rw == r and r > 1 \
+        else (lambda ri, i: (0, i))
+    if accumulate:
+        red_specs = [
+            pl.BlockSpec((1, k, d), lambda ri, i: (ri, 0, 0)),   # sums
+            pl.BlockSpec((1, k), lambda ri, i: (ri, 0)),         # counts
+            pl.BlockSpec((1, 1), lambda ri, i: (ri, 0)),         # J
+        ]
+        red_shapes = [
+            jax.ShapeDtypeStruct((r, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((r, k), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ]
+    else:
+        red_specs = [
+            pl.BlockSpec((1, 1, k, d), lambda ri, i: (ri, i, 0, 0)),
+            pl.BlockSpec((1, 1, k), lambda ri, i: (ri, i, 0)),
+            pl.BlockSpec((1, 1, 1), lambda ri, i: (ri, i, 0)),
+        ]
+        red_shapes = [
+            jax.ShapeDtypeStruct((r, s, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((r, s, k), jnp.float32),
+            jax.ShapeDtypeStruct((r, s, 1), jnp.float32),
+        ]
     return pl.pallas_call(
-        functools.partial(_kernel, n_valid=n_valid, block_n=block_n),
+        functools.partial(_kernel, accumulate=accumulate),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, d), lambda i: (i, 0)),   # points tile
-            pl.BlockSpec((k, d), lambda i: (0, 0)),         # centroids resident
+            pl.BlockSpec((1, block_n, d), xi),              # points tile
+            pl.BlockSpec((1, block_n), wi),                 # row weights
+            pl.BlockSpec((1, k, d), lambda ri, i: (ri, 0, 0)),  # centroids
         ],
         out_specs=[
-            pl.BlockSpec((block_n,), lambda i: (i,)),       # labels
-            pl.BlockSpec((k, d), lambda i: (0, 0)),         # sums (accumulated)
-            pl.BlockSpec((k,), lambda i: (0,)),             # counts (accumulated)
-            pl.BlockSpec((1,), lambda i: (0,)),             # J (accumulated)
+            pl.BlockSpec((1, block_n), lambda ri, i: (ri, i)),  # labels
+            *red_specs,
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n,), jnp.int32),
-            jax.ShapeDtypeStruct((k, d), jnp.float32),
-            jax.ShapeDtypeStruct((k,), jnp.float32),
-            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((r, n), jnp.int32),
+            *red_shapes,
         ],
         interpret=interpret,
-    )(x, centroids)
+    )(x, w, centroids)

@@ -1,12 +1,29 @@
-"""jit'd public wrapper: pad → pallas_call → trim.
+"""Public k-means assignment op, dispatched through the backend registry.
 
-Padding policy (TPU alignment):
-  D → multiple of 128 (vector lanes) with zeros — distances unchanged;
-  K → multiple of 8 (sublanes) with +1e9 sentinel centroids — never argmin;
-  N → multiple of block_n — masked out of statistics via static n_valid.
+``kernels.dispatch`` selects the implementation per call: ``tpu`` /
+``gpu`` compile the Pallas kernel (Mosaic / Triton lowering, per-backend
+``layout.TilePolicy`` padding), ``interpret`` runs the same kernel under
+the Pallas interpreter (the CPU CI path), and ``xla`` is the pure-jnp
+reference contract.  ``backend=None`` auto-resolves from
+``jax.default_backend()``; the legacy ``interpret=`` kwarg still forces
+the interpreter.
 
-On CPU (this container) the kernel runs in interpret mode; on TPU it
-compiles.  ``interpret=None`` auto-detects.
+Padding policy (Pallas backends):
+  D → multiple of the backend's lane alignment with zeros — distances
+      unchanged;
+  K → multiple of the sublane alignment with +1e9 sentinel centroids —
+      never argmin;
+  N → multiple of block_n — padded rows carry weight 0.
+
+Restart axis: ``centroids`` (and optionally ``x``/``mask``) accept a
+leading [R, ...] batch dimension, mapped onto the kernel grid's restart
+axis; a ``jax.custom_batching.custom_vmap`` rule routes ``jax.vmap`` of
+this op (the engine's multi-restart driver) onto that axis instead of
+failing in the pallas batching rule.
+
+``mask`` is an optional [N] f32 row-weight vector (0 drops a row from the
+statistics and labels it -1) — the contract the engine's padded chunk
+layout and minibatch draws rely on.
 """
 from __future__ import annotations
 
@@ -15,74 +32,125 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch, layout
+from repro.kernels.layout import chunk_bounds  # noqa: F401  (historical home)
+
 from .kernel import kmeans_assign_kernel
 
 _PAD_CENTROID = 1.0e9
 
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
+OP = dispatch.get_op("kmeans_assign")
 
 
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+# --------------------------------------------------------------------------
+# Backend implementations.  Shared internal contract:
+#   impl(x, w, c, *, block_n) -> (labels, sums, counts, j)
+# with x [N, D] | [R, N, D], w [N] | [R, N], c [K, D] | [R, K, D]; outputs
+# carry the leading R iff the centroids do.
+# --------------------------------------------------------------------------
 
-
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def _padded_call(x, centroids, block_n: int, interpret: bool):
-    n, d = x.shape
-    k = centroids.shape[0]
-    n_pad = _round_up(n, block_n)
-    d_pad = _round_up(d, 128)
-    k_pad = _round_up(k, 8)
-    xp = jnp.pad(x.astype(jnp.float32), ((0, n_pad - n), (0, d_pad - d)))
-    cp = jnp.pad(centroids.astype(jnp.float32),
-                 ((0, k_pad - k), (0, d_pad - d)))
+@functools.partial(jax.jit, static_argnames=("block_n", "backend"))
+def _pallas_impl(x, w, c, *, block_n: int, backend: str):
+    pol = layout.tile_policy(backend)
+    batched = c.ndim == 3
+    c3 = c if batched else c[None]
+    x3 = x if x.ndim == 3 else x[None]
+    w2 = w if w.ndim == 2 else w[None]
+    if c3.ndim != 3 or x3.ndim != 3:
+        raise NotImplementedError(
+            "kmeans_assign supports one leading restart axis at most; "
+            f"got x {x.shape}, centroids {c.shape}")
+    n, d = x3.shape[1:]
+    k = c3.shape[1]
+    n_pad = layout.round_up(n, block_n)
+    d_pad = pol.align_d(d)
+    k_pad = pol.align_k(k)
+    xp = jnp.pad(x3.astype(jnp.float32),
+                 ((0, 0), (0, n_pad - n), (0, d_pad - d)))
+    wp = jnp.pad(w2.astype(jnp.float32), ((0, 0), (0, n_pad - n)))
+    cp = jnp.pad(c3.astype(jnp.float32),
+                 ((0, 0), (0, k_pad - k), (0, d_pad - d)))
     if k_pad > k:  # sentinel rows: huge distance, never selected
-        cp = cp.at[k:, :].set(_PAD_CENTROID)
-    labels, sums, counts, j = kmeans_assign_kernel(
-        xp, cp, n_valid=n, block_n=block_n, interpret=interpret)
-    return labels[:n], sums[:k, :d], counts[:k], j[0]
+        cp = cp.at[:, k:, :].set(_PAD_CENTROID)
+    if backend == "gpu":   # parallel grid cells: split reduction
+        labels, sums, counts, j = kmeans_assign_kernel(
+            xp, wp, cp, block_n=block_n, interpret=False, accumulate=False)
+        sums, counts, j = (jnp.sum(sums, axis=1), jnp.sum(counts, axis=1),
+                           jnp.sum(j, axis=1))
+    else:
+        labels, sums, counts, j = kmeans_assign_kernel(
+            xp, wp, cp, block_n=block_n,
+            interpret=(backend == "interpret"))
+    labels, sums = labels[:, :n], sums[:, :k, :d]
+    counts, j = counts[:, :k], j[:, 0]
+    if not batched:
+        labels, sums, counts, j = labels[0], sums[0], counts[0], j[0]
+    return labels, sums, counts, j
 
 
-def kmeans_assign(x, centroids, *, block_n: int = 1024,
-                  interpret: bool | None = None):
-    """Fused assignment: (labels [N] i32, sums [K,D], counts [K], j [])."""
-    if interpret is None:
-        interpret = _auto_interpret()
-    n = x.shape[0]
-    block_n = min(block_n, _round_up(max(n, 8), 8))
-    return _padded_call(x, centroids, block_n, interpret)
+for _b in dispatch.PALLAS_BACKENDS:
+    OP.register(_b)(functools.partial(_pallas_impl, backend=_b))
 
 
-def chunk_bounds(n: int, chunks: int) -> list[tuple[int, int]]:
-    """Static [start, stop) slices covering N in ``chunks`` pieces; the last
-    piece absorbs the remainder when chunks does not divide N."""
-    c = max(1, min(int(chunks), n))
-    per = -(-n // c)
-    return [(s, min(s + per, n)) for s in range(0, n, per)]
+@OP.register("xla")
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def _xla_impl(x, w, c, *, block_n: int):
+    # delegates to the ref oracle (one copy of the math — see ref.py)
+    del block_n
+    from .ref import kmeans_assign_masked_ref
+    if c.ndim == 2:
+        return kmeans_assign_masked_ref(x, w, c)
+    return jax.vmap(kmeans_assign_masked_ref,
+                    in_axes=(0 if x.ndim == 3 else None,
+                             0 if w.ndim == 2 else None, 0))(x, w, c)
 
 
-def kmeans_assign_chunked(x, centroids, *, chunks: int = 1,
-                          block_n: int = 1024,
-                          interpret: bool | None = None):
-    """Streaming entry point for the fused kernel (engine ``chunks`` mode).
+# --------------------------------------------------------------------------
+# Public op (+ the custom_vmap restart-axis rule)
+# --------------------------------------------------------------------------
 
-    Slices N into statically-sized pieces, runs the kernel per piece (each
-    call keeps the kernel's own n_valid masking), and accumulates the
-    additive statistics — so the [N, K] intermediate never exceeds one
-    chunk.  Same contract as ``kmeans_assign``.
+# (block_n, backend) → custom_vmap-wrapped call; the restart-axis batching
+# rule lives in dispatch.make_dispatched_factory (shared with gmm_estep)
+_dispatched = dispatch.make_dispatched_factory(OP, n_out=4)
+
+
+def kmeans_assign(x, centroids, *, mask=None, block_n: int | None = None,
+                  backend: str | None = None, interpret: bool | None = None):
+    """Fused assignment: (labels [N] i32, sums [K,D], counts [K], j []).
+
+    Accepts a leading restart axis on ``centroids`` (and ``x``/``mask``)
+    and composes with ``jax.vmap``; see the module docstring for the
+    backend registry and ``mask`` contract.
     """
-    n = x.shape[0]
+    b = dispatch.resolve_backend(backend, interpret)
+    pol = layout.tile_policy(b)
+    n = x.shape[-2]
+    bn = pol.block_for(n, block_n)
+    w = (jnp.ones(x.shape[:-1], jnp.float32) if mask is None
+         else jnp.asarray(mask, jnp.float32))
+    return _dispatched(bn, b)(x, w, centroids)
+
+
+def kmeans_assign_chunked(x, centroids, *, chunks: int = 1, mask=None,
+                          block_n: int | None = None,
+                          backend: str | None = None,
+                          interpret: bool | None = None):
+    """Streaming entry point for the fused op (engine ``chunks`` mode).
+
+    Slices N into statically-sized pieces via the shared chunked-call
+    driver (``layout.chunked_sweep``), runs the dispatched op per piece,
+    and accumulates the additive statistics — the [N, K] intermediate
+    never exceeds one chunk.  Same contract as ``kmeans_assign``.
+    """
+    n = x.shape[-2]
     if chunks <= 1 or n <= 1:
-        return kmeans_assign(x, centroids, block_n=block_n,
-                             interpret=interpret)
-    labels, sums, counts, j = [], None, None, None
-    for a, b in chunk_bounds(n, chunks):
-        lab, s, cnt, jj = kmeans_assign(x[a:b], centroids, block_n=block_n,
-                                        interpret=interpret)
-        labels.append(lab)
-        sums = s if sums is None else sums + s
-        counts = cnt if counts is None else counts + cnt
-        j = jj if j is None else j + jj
-    return jnp.concatenate(labels), sums, counts, j
+        return kmeans_assign(x, centroids, mask=mask, block_n=block_n,
+                             backend=backend, interpret=interpret)
+
+    def call(a, b):
+        return kmeans_assign(
+            x[..., a:b, :], centroids,
+            mask=None if mask is None else mask[..., a:b],
+            block_n=block_n, backend=backend, interpret=interpret)
+
+    return layout.chunked_sweep(call, n, chunks)

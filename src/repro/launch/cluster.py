@@ -7,9 +7,10 @@ Pipeline: synthesize/load data â†’ random-sample into groups â†’ 10-fold split â
 run training groups to convergence recording (r_i, h_i) â†’ fit the regression
 (model selection or pinned quadratic) â†’ h* = f(r*) â†’ early-stopped production
 clustering (on-device while_loop; shard_map over the data axis when this host
-has multiple devices â€” full sweeps, minibatch, and vmapped multi-restart all
-compose with --shard) â†’ validation: achieved accuracy vs. the full run +
-cost report (Eq. 6/9/10).
+has multiple devices â€” full sweeps, minibatch, vmapped multi-restart and the
+--use-kernel fused sweeps all compose with --shard; --kernel-backend pins a
+registry backend) â†’ validation: achieved accuracy vs. the full run + cost
+report (Eq. 6/9/10).
 
 Set ``--devices N`` via XLA host-platform flag *before* launch to exercise
 the distributed path, e.g.:
@@ -18,7 +19,6 @@ the distributed path, e.g.:
 from __future__ import annotations
 
 import argparse
-import functools
 import json
 import time
 
@@ -83,7 +83,7 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
                    use_kernel: bool = False, patience: int = 3,
                    chunks: int = 1, restarts: int = 1,
                    mode: str = "full", batch_chunks: int = 0,
-                   decay: float = 1.0,
+                   decay: float = 1.0, kernel_backend: str | None = None,
                    model=None, desired_accuracy: float | None = None):
     """Early-stopped production run; optional shard_map over host devices.
 
@@ -118,6 +118,8 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
                   use_kernel=use_kernel, use_h_stop=not full_reference,
                   stop_when_frozen=(algorithm == "kmeans"),
                   mode=mode, batch_chunks=batch_chunks, decay=decay)
+    if use_kernel and kernel_backend not in (None, "auto"):
+        cfg_kw["kernel_backend"] = kernel_backend
     if mode == "minibatch":
         # config is a static jit argument: only bake the seed in when the
         # engine actually samples from it, or every per-group seed would
@@ -152,12 +154,16 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
     c0 = core.kmeans_plus_plus_init(key, x, k, chunks=chunks)
     h_star = cfg.h_star
 
-    if shard and not use_kernel:
+    if shard:
         # the engine's sharded chunk-layout driver â€” one path for both
-        # modes: cfg already encodes the stop semantics (incl. the
-        # full_reference frozen-centroids guard via use_h_stop=False), and
-        # the padded layout keeps every row (no shard_points truncation),
-        # so the label contract matches the unsharded run
+        # modes AND both sweep implementations: cfg already encodes the
+        # stop semantics (incl. the full_reference frozen-centroids guard
+        # via use_h_stop=False) and the kernel routing (the dispatched ops
+        # take the chunk mask as a weight operand, so the padded layout
+        # streams through Pallas exactly like through jnp), and the padded
+        # layout keeps every row â€” the label contract matches the
+        # unsharded run.  The old flat shard_map drivers (which truncated
+        # N to a shardable size for use_kernel) are gone.
         eng = ClusteringEngine(algorithm, cfg)
         params0 = c0 if algorithm == "kmeans" else em_gmm.init_from_kmeans(
             x, c0)
@@ -166,61 +172,6 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
         jax.block_until_ready(res.labels)
         return (res.labels, float(res.objective), int(res.n_iters),
                 time.time() - t0)
-
-    if shard:
-        # use_kernel: the fused Pallas contract has no row-sharded chunk
-        # layout yet (fit_sharded raises) â€” keep the flat shard_map
-        # drivers, which truncate N to a shardable size
-        from jax.sharding import PartitionSpec as P
-        from jax import shard_map
-        from repro.distribution.sharding import points_spec, shard_points
-        mesh = _data_mesh()
-        x, _ = shard_points(x, mesh)           # truncate to shardable size
-        if algorithm == "kmeans":
-            if full_reference:
-                # the Time_full baseline must stop on frozen centroids, not
-                # on the h predicate: h*=0 quits on fp32 J plateaus before
-                # the Lloyd fixed point (see kmeans_fit_full) â€” the sharded
-                # leg gets the same guard as the single-device path
-                fit = shard_map(
-                    functools.partial(core.kmeans_fit_full,
-                                      max_iters=max_iters, axis_name="data",
-                                      use_kernel=use_kernel, chunks=chunks),
-                    mesh=mesh, in_specs=(points_spec(mesh), P(None, None)),
-                    out_specs=(P(None, None), P("data"), P(), P()),
-                    check_vma=False)
-                t0 = time.time()
-                c, labels, j, iters = fit(x, c0)
-            else:
-                fit = shard_map(
-                    functools.partial(core.kmeans_fit_earlystop,
-                                      max_iters=max_iters, axis_name="data",
-                                      use_kernel=use_kernel, patience=patience,
-                                      chunks=chunks),
-                    mesh=mesh,
-                    in_specs=(points_spec(mesh), P(None, None), P()),
-                    out_specs=(P(None, None), P("data"), P(), P()),
-                    check_vma=False)
-                t0 = time.time()
-                c, labels, j, iters = fit(x, c0, jnp.asarray(h_star))
-            jax.block_until_ready(labels)
-            return labels, float(j), int(iters), time.time() - t0
-        p0 = em_gmm.init_from_kmeans(x, c0)
-        fit = shard_map(
-            functools.partial(em_gmm.em_fit_earlystop, max_iters=max_iters,
-                              axis_name="data", use_kernel=use_kernel,
-                              patience=patience, chunks=chunks),
-            mesh=mesh,
-            in_specs=(points_spec(mesh),
-                      em_gmm.GMMParams(P(None, None), P(None, None), P(None)),
-                      P()),
-            out_specs=(em_gmm.GMMParams(P(None, None), P(None, None), P(None)),
-                       P("data"), P(), P()),
-            check_vma=False)
-        t0 = time.time()
-        params, labels, ll, iters = fit(x, p0, jnp.asarray(h_star))
-        jax.block_until_ready(labels)
-        return labels, float(ll), int(iters), time.time() - t0
 
     eng = ClusteringEngine(algorithm, cfg)
     params0 = c0 if algorithm == "kmeans" else em_gmm.init_from_kmeans(x, c0)
@@ -258,10 +209,21 @@ def main():
     ap.add_argument("--restarts", type=int, default=1,
                     help="vmapped multi-restart count; best objective wins")
     ap.add_argument("--use-kernel", action="store_true",
-                    help="route through the Pallas kernels (interpret on CPU)")
+                    help="route sweeps through the kernel dispatch layer "
+                         "(backend registry: Pallas compiled on TPU/GPU, "
+                         "interpreter elsewhere; composes with --shard, "
+                         "--restarts and --mode minibatch)")
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=["auto", "tpu", "gpu", "interpret", "xla"],
+                    help="pin a registry backend for --use-kernel (auto "
+                         "resolves from jax.default_backend(); xla is the "
+                         "reference contract)")
     ap.add_argument("--instance", default="m5.large")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+
+    if args.kernel_backend != "auto" and not args.use_kernel:
+        ap.error("--kernel-backend only applies with --use-kernel")
 
     if args.mode == "minibatch":
         # make the bare `--mode minibatch` recipe runnable: the full-sweep
@@ -309,13 +271,14 @@ def main():
             seed=100 + gi, shard=args.shard, use_kernel=args.use_kernel,
             chunks=args.chunks, restarts=args.restarts,
             mode=args.mode, batch_chunks=args.batch_chunks, decay=args.decay,
+            kernel_backend=args.kernel_backend,
             model=model, desired_accuracy=args.desired_accuracy)
         # the full-convergence baseline always runs full sweeps â€” it is the
         # Time_full / 100%-accuracy reference the savings are measured from
         labels_f, j_f, it2, t2 = run_production(
             g, args.k, args.algorithm, 0.0, max_iters=args.max_iters * 3,
             seed=100 + gi, shard=args.shard, use_kernel=args.use_kernel,
-            chunks=args.chunks)
+            kernel_backend=args.kernel_backend, chunks=args.chunks)
         t_actual += t1
         t_full += t2
         accs.append(float(core.rand_index(labels[:labels_f.shape[0]],

@@ -3,7 +3,10 @@ under an in-process 8-device ("data",) mesh must reproduce the
 single-device engine — the globally-chunked layout makes every shard's
 local chunk a row-slice of the global chunk, so the seeded draw selects
 the same subsample and the whole trajectory matches up to fp32 reduction
-order (params within tolerance, identical stop iteration)."""
+order (params within tolerance, identical stop iteration).  Since ISSUE 4
+the same drivers serve use_kernel=True (per-chunk masked kernel calls
+through the backend registry) — parity-tested below for full, minibatch
+and vmapped-restart fleets."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -165,11 +168,46 @@ def test_sharded_restarts_em_runs(blobs, c0, mesh8):
 # Guard rails
 # --------------------------------------------------------------------------
 
-def test_fit_sharded_use_kernel_fails_loud(blobs, c0, mesh8):
+def test_fit_sharded_use_kernel_matches_single_device(blobs, c0, mesh8):
+    """ISSUE 4: the sharded chunk layout streams through the dispatched
+    kernel ops (the chunk mask rides the kernels' weight operand), where it
+    used to raise NotImplementedError — full-mode parity with the unsharded
+    kernel fit."""
     eng = ClusteringEngine("kmeans", EngineConfig(
-        max_iters=10, chunks=4, use_kernel=True))
-    with pytest.raises(NotImplementedError, match="use_kernel=False"):
-        eng.fit_sharded(blobs, c0, _data_mesh(mesh8))
+        max_iters=100, chunks=4, stop_when_frozen=True, use_kernel=True))
+    ref = eng.fit(blobs, c0, h_star=1e-4)
+    res = eng.fit_sharded(blobs, c0, _data_mesh(mesh8), h_star=1e-4)
+    assert int(res.n_iters) == int(ref.n_iters)
+    np.testing.assert_allclose(res.params, ref.params, rtol=1e-4, atol=1e-4)
+    assert float((res.labels == ref.labels).mean()) > 0.999
+
+
+def test_fit_sharded_minibatch_use_kernel_matches_single_device(
+        blobs, c0, mesh8):
+    """Minibatch + kernel + shard_map: the replicated draw dynamic-slices
+    the same global chunks on every shard and the psum'd kernel stats drive
+    the paired stop — same trajectory as the unsharded kernel fit."""
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        stop_when_frozen=True, use_kernel=True, **MB))
+    ref = eng.fit(blobs, c0, h_star=1e-4)
+    res = eng.fit_sharded(blobs, c0, _data_mesh(mesh8), h_star=1e-4)
+    assert int(res.n_iters) == int(ref.n_iters)
+    np.testing.assert_allclose(res.params, ref.params, rtol=1e-4, atol=1e-4)
+
+
+def test_sharded_restarts_use_kernel_parity(blobs, mesh8):
+    """vmap-of-psum over per-chunk kernel calls inside shard_map: the
+    restart fleet's custom_vmap routing survives the mesh."""
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=100, chunks=4, stop_when_frozen=True, use_kernel=True))
+    params0 = eng.init_restarts(jax.random.PRNGKey(2), blobs, K, 3)
+    ref = eng.fit_restarts(blobs, params0, h_star=1e-4)
+    rr = eng.fit_restarts_sharded(blobs, params0, _data_mesh(mesh8),
+                                  h_star=1e-4)
+    assert int(rr.best_index) == int(ref.best_index)
+    np.testing.assert_array_equal(np.asarray(rr.n_iters),
+                                  np.asarray(ref.n_iters))
+    np.testing.assert_allclose(rr.objectives, ref.objectives, rtol=1e-4)
 
 
 def test_fit_sharded_needs_data_axis(blobs, c0, mesh8):

@@ -1,11 +1,13 @@
-"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
-mode on CPU; same code targets TPU)."""
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (the ops
+dispatch through the backend registry: interpret on CPU CI, compiled on
+TPU/GPU — see tests/test_dispatch.py for the registry itself)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.kmeans_assign import kmeans_assign
+from repro.kernels.kmeans_assign.ops import kmeans_assign_chunked
 from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
 from repro.kernels.gmm_estep import gmm_estep
 from repro.kernels.gmm_estep.ref import gmm_estep_ref
@@ -102,6 +104,28 @@ def test_flash_attention_property(s, dh, win):
     o1 = flash_attention(q, k, v, causal=True, window=win)
     o2 = attention_ref(q, k, v, causal=True, window=win)
     assert float(jnp.max(jnp.abs(o1 - o2))) < 2e-5
+
+
+def test_flash_attention_xla_backend_is_reference():
+    """The registry's xla backend for flash_attention IS the oracle."""
+    q = jnp.asarray(RNG.normal(0, 1, (1, 4, 96, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (1, 2, 96, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (1, 2, 96, 32)), jnp.float32)
+    o1 = flash_attention(q, k, v, causal=True, backend="xla")
+    o2 = attention_ref(q, k, v, causal=True)
+    assert float(jnp.max(jnp.abs(o1 - o2))) == 0.0
+
+
+def test_kmeans_assign_chunked_mask_slices_with_chunks():
+    """The shared chunked driver slices the mask alongside the rows."""
+    x = jnp.asarray(RNG.normal(0, 5, (300, 4)).astype(np.float32))
+    c = jnp.asarray(RNG.normal(0, 5, (5, 4)).astype(np.float32))
+    m = jnp.asarray((RNG.random(300) > 0.25).astype(np.float32))
+    a = kmeans_assign(x, c, mask=m)
+    b = kmeans_assign_chunked(x, c, chunks=4, mask=m)
+    assert (a[0] == b[0]).all()
+    np.testing.assert_allclose(a[1], b[1], rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(a[3], b[3], rtol=1e-5)
 
 
 def test_chunked_jnp_attention_matches_exact():
