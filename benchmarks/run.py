@@ -98,15 +98,12 @@ def fig6_regression():
 def model_selection():
     """§4/§5.5-internal: quadratic vs linear/cubic/exp/lasso by adj-R²."""
     from benchmarks.paper_experiments import experiment, fit_model
-    from repro.core import select_model, pool_traces
+    from repro.core import select_model, pool_traces, rh_from_objectives
     rows = []
     for algorithm in ("kmeans", "em"):
         model, train_runs, _, _ = experiment("3D_Road/4", algorithm)
-        traces = []
-        for g in train_runs:
-            js = g.objectives
-            h = np.abs(np.diff(js)) / np.maximum(np.abs(js[:-1]), 1e-30)
-            traces.append((g.accuracies[1:], h))
+        traces = [(g.accuracies[1:], rh_from_objectives(g.objectives))
+                  for g in train_runs]
         r, h = pool_traces(traces)
         _, table = select_model(r, h)
         for fam, m in table.items():
@@ -239,9 +236,7 @@ def case_study_landuse():
     model = core.fit_longtail([(np.asarray(r), np.asarray(h))],
                               algorithm="kmeans", dataset="spacenet",
                               family="quadratic")
-    stop = None
-    js = np.asarray(res["objectives"])
-    hh = np.abs(np.diff(js)) / np.maximum(np.abs(js[:-1]), 1e-30)
+    hh = core.rh_from_objectives(res["objectives"])
     idx = np.where(hh <= model.threshold_for(0.99))[0]
     frac = (int(idx[0]) + 2) / res["n_iters"] if idx.size else 1.0
 
@@ -612,6 +607,130 @@ def kernel_backends():
     }
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     path = os.path.join(root, "BENCH_kernel_backends.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return rows
+
+
+@bench("longtail_matched")
+def longtail_matched():
+    """ISSUE 5: mode-matched vs transferred h(r) fits on the skin config.
+
+    Both models are fitted on the SAME training groups through the
+    engine-trace pipeline (``repro.core.longtail_train``) — one harvested
+    under the minibatch production config (matched), one under full-batch
+    sweeps (the legacy transfer regime) — then both serve the SAME
+    minibatch production runs on held-out groups at r* ∈ {0.95, 0.99}.
+    Achieved accuracy = Rand index vs the group's full-convergence
+    partition from the same init (the paper's §5.3 validation).
+
+    Persists ``BENCH_longtail_matched.json`` at the repo root (tracked
+    artifact).  Tracked claims: the matched fit's achieved-accuracy
+    spread (max − min across held-out groups) at r* = 0.99 is ≤ the
+    transferred fit's, and its mean achieved accuracy at r* = 0.95 clears
+    0.95 (the CI ``longtail-artifacts`` gate).
+    """
+    import warnings
+
+    import jax
+    import jax.numpy as jnp
+    from repro import core
+    from repro.core.engine import ClusteringEngine, EngineConfig
+    from repro.core.longtail_train import TrainingPlan, fit_for_config
+    from repro.data import load
+
+    k, chunks, b, decay = 2, 8, 2, 0.95
+    data = load("skin", n=60_000, seed=0)
+    groups = core.random_groups(data, 6_000, max_groups=8)
+    train_g, prod_g = groups[:4], groups[4:]
+
+    # decay 0.95 = the documented 25%-touch production recipe
+    # (minibatch_scaling); both fits use the balanced r-binned cloud so the
+    # transition region the thresholds live in is equally weighted — the
+    # raw skin cloud puts almost all mass at r ≈ 1 and under-constrains
+    # both regressions.
+    prod_cfg = EngineConfig(mode="minibatch", chunks=chunks, batch_chunks=b,
+                            decay=decay, patience=5, max_iters=400,
+                            stop_when_frozen=True)
+    models = {
+        "matched": fit_for_config(TrainingPlan(
+            algorithm="kmeans", k=k, config=prod_cfg, family="quadratic",
+            balanced=True), train_g),
+        "transferred": fit_for_config(TrainingPlan(
+            algorithm="kmeans", k=k, config=EngineConfig(max_iters=400),
+            family="quadratic", balanced=True), train_g),
+    }
+
+    # full-convergence reference partition per held-out group (same init)
+    full = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=1200, chunks=chunks, use_h_stop=False,
+        stop_when_frozen=True))
+    inits, refs = [], []
+    for gi, g in enumerate(prod_g):
+        x = jnp.asarray(g)
+        c0 = core.kmeans_plus_plus_init(jax.random.PRNGKey(100 + gi), x, k,
+                                        chunks=chunks)
+        inits.append(c0)
+        refs.append(full.fit(x, c0).labels)
+
+    prod_kw = dict(mode="minibatch", chunks=chunks, batch_chunks=b,
+                   decay=decay, patience=5, max_iters=400,
+                   stop_when_frozen=True)
+    rows = []
+    spreads = {}
+    for r_star in (0.95, 0.99):
+        for name, model in models.items():
+            accs, iters = [], []
+            for gi, g in enumerate(prod_g):
+                with warnings.catch_warnings():
+                    # the transferred model mismatches by design
+                    warnings.simplefilter("ignore")
+                    cfg = EngineConfig.from_longtail(
+                        model, r_star, seed=100 + gi, **prod_kw)
+                res = ClusteringEngine("kmeans", cfg).fit(
+                    jnp.asarray(g), inits[gi])
+                accs.append(float(core.rand_index(res.labels, refs[gi],
+                                                  k, k)))
+                iters.append(int(res.n_iters))
+            spread = max(accs) - min(accs)
+            spreads[(r_star, name)] = spread
+            rows.append({
+                "name": f"{name}_rstar{r_star}", "fit": name,
+                "r_star": r_star,
+                "h_star": f"{model.threshold_for(r_star):.3e}",
+                "acc_mean": round(float(np.mean(accs)), 4),
+                "acc_min": round(min(accs), 4),
+                "acc_max": round(max(accs), 4),
+                "spread": round(spread, 4),
+                "mean_iters": round(float(np.mean(iters)), 1),
+                "per_group_acc": "|".join(f"{a:.4f}" for a in accs),
+            })
+
+    payload = {
+        "benchmark": "longtail_matched",
+        "dataset": "skin", "k": k, "n": 60_000, "group_size": 6_000,
+        "train_groups": 4, "prod_groups": len(prod_g),
+        "production_config": prod_cfg.matched_fingerprint(),
+        "matched_provenance": models["matched"].engine_config,
+        "claims": {
+            "matched_spread_le_transferred_at_0.99":
+                bool(spreads[(0.99, "matched")]
+                     <= spreads[(0.99, "transferred")]),
+            "matched_acc_mean_at_0.95_ge_0.95":
+                bool(next(r for r in rows
+                          if r["name"] == "matched_rstar0.95")["acc_mean"]
+                     >= 0.95),
+        },
+        "note": "achieved accuracy = Rand vs the full-convergence "
+                "partition of the same held-out group and init; spread = "
+                "max - min across held-out groups; both fits share "
+                "training groups and differ only in harvest regime",
+        "rows": rows,
+    }
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_longtail_matched.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
         f.write("\n")

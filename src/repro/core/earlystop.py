@@ -31,12 +31,20 @@ def change_rate(j_curr, j_prev, eps: float = 1e-30):
 class LongTailModel:
     """Fitted h(r) regression + provenance, serialisable for reuse (§5.4:
 
-    the training process runs once; the regression is applied repeatedly)."""
+    the training process runs once; the regression is applied repeatedly).
+
+    ``engine_config`` records the engine regime the (r, h) traces were
+    harvested under (mode, batch_chunks, decay, ema, kernel routing, chunk
+    layout, device count — see ``longtail_train.config_fingerprint``);
+    ``EngineConfig.from_longtail`` compares it against the production
+    config and warns loudly on a mismatch.  ``None`` marks a legacy /
+    externally-harvested fit with no stamped regime (no warning)."""
     regression: RegressionModel
     algorithm: str                  # "kmeans" | "em" | "lm_train" | ...
     dataset: str
     n_train_groups: int
     comparison: dict | None = None  # {family: FitMetrics} from model selection
+    engine_config: dict | None = None   # harvest-regime provenance
 
     def threshold_for(self, desired_accuracy: float) -> float:
         return self.regression.threshold_for(desired_accuracy)
@@ -53,6 +61,8 @@ class LongTailModel:
         }
         if self.comparison is not None:
             d["comparison"] = {k: dataclasses.asdict(v) for k, v in self.comparison.items()}
+        if self.engine_config is not None:
+            d["engine_config"] = self.engine_config
         return json.dumps(d, indent=2)
 
     @staticmethod
@@ -66,18 +76,22 @@ class LongTailModel:
         return LongTailModel(regression=reg, algorithm=d["algorithm"],
                              dataset=d["dataset"],
                              n_train_groups=d["n_train_groups"],
-                             comparison=comparison)
+                             comparison=comparison,
+                             engine_config=d.get("engine_config"))
 
 
 def fit_longtail(traces: Sequence[tuple[np.ndarray, np.ndarray]], *,
                  algorithm: str, dataset: str, family: str | None = None,
-                 balanced: bool = False) -> LongTailModel:
+                 balanced: bool = False,
+                 engine_config: dict | None = None) -> LongTailModel:
     """Pool (r, h) traces from the training groups and fit the regression.
 
     ``family=None`` runs the paper's model-selection comparison and keeps the
     winner; passing e.g. ``"quadratic"`` pins the paper's default.
     ``balanced=True`` applies the r-binned geometric-mean aggregation before
     fitting (beyond-paper robustification — see regression.balance_cloud).
+    ``engine_config`` stamps harvest-regime provenance onto the model (see
+    ``LongTailModel``); the mode-matched trainer always passes it.
     """
     r, h = pool_traces(traces)
     if balanced:
@@ -89,7 +103,8 @@ def fit_longtail(traces: Sequence[tuple[np.ndarray, np.ndarray]], *,
         from .regression import fit_family
         best, table = fit_family(r, h, family), None
     return LongTailModel(regression=best, algorithm=algorithm, dataset=dataset,
-                         n_train_groups=len(traces), comparison=table)
+                         n_train_groups=len(traces), comparison=table,
+                         engine_config=engine_config)
 
 
 def harvest_lm_trace(losses, ema: float = 0.95):

@@ -242,6 +242,16 @@ class EngineConfig:
     local chunking a row-slice of the *global* one, so the drawn subsample
     — and hence the whole trajectory — matches the single-device run up to
     fp32 reduction order.
+
+    ``trace=True`` makes every fit driver additionally return a
+    per-iteration :class:`Trace` (objective sequence, Eq. 7 change-rate
+    sequence — the *paired* rate in minibatch mode — iteration mask and
+    the parameter trajectory) recorded inside the ``while_loop`` carry.
+    This is the mode-matched training hook: (r, h) harvesting runs under
+    the exact production configuration instead of replaying sweeps
+    host-side (see ``repro.core.longtail_train``).  The buffers are
+    [max_iters]-shaped (params: [max_iters, ...]); sizes are a few KB for
+    clustering workloads.
     """
     max_iters: int = 300
     h_star: float = 0.0
@@ -257,6 +267,7 @@ class EngineConfig:
     seed: int = 0                   # minibatch chunk-sampling PRNG stream
     ema: float = 0.0                # minibatch h smoothing (0 = raw)
     kernel_backend: str | None = None   # registry backend; None = auto
+    trace: bool = False             # record a per-iteration Trace
 
     def __post_init__(self):
         # CI hook: REPRO_FORCE_KERNEL_BACKEND=<backend> reroutes every
@@ -313,10 +324,76 @@ class EngineConfig:
             if not 0.0 < self.decay <= 1.0:
                 raise ValueError(f"decay must be in (0, 1]; got {self.decay}")
 
+    # engine-regime fields a fitted LongTailModel's provenance is compared
+    # against in from_longtail (chunks only matters when minibatch draws
+    # sample from it — full-mode chunking is a memory layout, not a regime)
+    MATCHED_FIELDS = ("mode", "batch_chunks", "decay", "ema", "use_kernel",
+                      "kernel_backend")
+
+    def matched_fingerprint(self) -> dict:
+        """The regime this config clusters under, as stampable provenance."""
+        d = {f: getattr(self, f) for f in self.MATCHED_FIELDS}
+        d["chunks"] = self.chunks
+        return d
+
     @classmethod
     def from_longtail(cls, model, desired_accuracy: float, **kw):
-        """Route a fitted LongTailModel through the engine: h* = f(r*)."""
-        return cls(h_star=float(model.threshold_for(desired_accuracy)), **kw)
+        """Route a fitted LongTailModel through the engine: h* = f(r*).
+
+        When the model carries engine-config provenance (it was fitted by
+        ``repro.core.longtail_train`` on traces harvested under a concrete
+        ``EngineConfig``), the production config built here is compared
+        against it and a loud ``UserWarning`` fires on a regime mismatch —
+        a transferred h* still *works* (the paired stop keeps the Eq. 7
+        scale compatible) but is not mode-matched, which widens the
+        achieved-accuracy spread (ROADMAP; ``BENCH_longtail_matched.json``
+        quantifies it).
+        """
+        cfg = cls(h_star=float(model.threshold_for(desired_accuracy)), **kw)
+        prov = getattr(model, "engine_config", None)
+        if prov:
+            fields = list(cls.MATCHED_FIELDS)
+            if prov.get("mode") == "minibatch" or cfg.mode == "minibatch":
+                fields.append("chunks")
+            diff = {f: (prov[f], getattr(cfg, f)) for f in fields
+                    if f in prov and prov[f] != getattr(cfg, f)}
+            if diff:
+                import warnings
+                detail = ", ".join(f"{f}: fitted={a!r} production={b!r}"
+                                   for f, (a, b) in sorted(diff.items()))
+                warnings.warn(
+                    "LongTailModel was fitted under a different engine "
+                    f"configuration than it is now serving ({detail}); "
+                    "h* transfers via the paired Eq. 7 stop but is not "
+                    "mode-matched — re-fit with "
+                    "repro.core.longtail_train.fit_for_config under the "
+                    "production EngineConfig to tighten the achieved-"
+                    "accuracy spread", UserWarning, stacklevel=2)
+        return cfg
+
+
+class Trace(NamedTuple):
+    """Per-iteration fit history, recorded on device when ``config.trace``.
+
+    All buffers are [T] = [max_iters]-shaped ([R, T] from the restart
+    drivers); ``mask[i] = 1`` marks iterations that actually executed.
+    ``h[i]`` is the Eq. 7 change rate of iteration i — the *paired*
+    same-subsample rate in minibatch mode — and ``params`` holds the
+    parameter state ``objectives[i]`` was measured at, i.e. the state whose
+    partition accuracy r_i pairs with h_i (pre-update parameters in full
+    mode, where J is evaluated before the update; post-update parameters in
+    paired minibatch mode, where the paired J is evaluated after it).
+    Index 0 of a full-mode trace carries h = inf (Eq. 7 starts at the
+    second sweep); harvesting drops non-finite rows.  A minibatch trace
+    with ``use_h_stop=False`` records the pre-update subsample objective
+    (no paired pass runs) and h stays inf throughout — there is no Eq. 7
+    signal to harvest without the pairing.
+    """
+    objectives: jnp.ndarray     # [T] J / loglik (per-point subsample value
+                                #     in minibatch mode)
+    h: jnp.ndarray              # [T] Eq. 7 change rate (paired in minibatch)
+    mask: jnp.ndarray           # [T] f32 1 where the iteration executed
+    params: Any                 # [T, ...] parameter trajectory
 
 
 class EngineResult(NamedTuple):
@@ -325,6 +402,7 @@ class EngineResult(NamedTuple):
     objective: jnp.ndarray      # [] J / loglik at the final params
     n_iters: jnp.ndarray        # [] int32
     h: jnp.ndarray              # [] last change rate observed
+    trace: Any = None           # Trace when config.trace, else None
 
 
 class RestartResult(NamedTuple):
@@ -332,6 +410,7 @@ class RestartResult(NamedTuple):
     best_index: jnp.ndarray     # [] int32
     objectives: jnp.ndarray     # [R] final objective per restart
     n_iters: jnp.ndarray        # [R] iterations per restart
+    traces: Any = None          # [R, T] Trace when config.trace, else None
 
 
 # --------------------------------------------------------------------------
@@ -475,6 +554,18 @@ class _State(NamedTuple):
     moved: jnp.ndarray
     key: jnp.ndarray            # minibatch chunk-sampling stream
     carry: Any                  # minibatch step-size state (v counts)
+    trace: Any                  # Trace buffers when config.trace, else ()
+
+
+def _zero_trace(config: EngineConfig, params0):
+    """Empty [T]-shaped trace buffers (h starts at inf — 'never measured')."""
+    t = config.max_iters
+    return Trace(
+        objectives=jnp.zeros((t,), jnp.float32),
+        h=jnp.full((t,), jnp.inf, jnp.float32),
+        mask=jnp.zeros((t,), jnp.float32),
+        params=jax.tree.map(
+            lambda a: jnp.zeros((t,) + a.shape, jnp.float32), params0))
 
 
 def _live(config: EngineConfig, iteration, hits, moved):
@@ -507,6 +598,7 @@ def _fit_loop(alg, config: EngineConfig, params0, h_star, n_total, sweep,
         moved=jnp.asarray(True),
         key=jax.random.PRNGKey(config.seed),
         carry=alg.zero_carry(params0) if minibatch else (),
+        trace=_zero_trace(config, params0) if config.trace else (),
     )
 
     def cond(s: _State):
@@ -547,15 +639,36 @@ def _fit_loop(alg, config: EngineConfig, params0, h_star, n_total, sweep,
                 jnp.asarray(jnp.inf, jnp.float32))
         hits = jnp.where(h <= h_star, s.hits + 1, 0)
         moved = alg.moved(new_params, s.params)
+        if config.trace:
+            # record where j was measured: at s.params in full mode (the
+            # sweep runs before the update) and at new_params in paired
+            # minibatch mode (the second pass runs after it) — either way
+            # h_i pairs with the state the iteration's transition arrived
+            # at, so the harvested accuracy r_i is read off the same
+            # index.  With the h predicate off, minibatch skips the paired
+            # pass and j is the pre-update subsample objective — record
+            # s.params then, keeping the measured-at invariant.
+            paired = minibatch and config.use_h_stop
+            i = s.iteration
+            tr = Trace(
+                objectives=s.trace.objectives.at[i].set(j),
+                h=s.trace.h.at[i].set(h),
+                mask=s.trace.mask.at[i].set(1.0),
+                params=jax.tree.map(
+                    lambda buf, p: buf.at[i].set(p), s.trace.params,
+                    new_params if paired else s.params))
+        else:
+            tr = s.trace
         return _State(new_params, j, h, hits, s.iteration + 1, moved,
-                      key, carry)
+                      key, carry, tr)
 
     final = jax.lax.while_loop(cond, body, init)
     # the labels pass is always a full sweep — minibatch only changes how
     # the parameters got there, not the result contract
     labels, stats = sweep(final.params, True)
     return EngineResult(final.params, labels, alg.objective(stats),
-                        final.iteration, final.h)
+                        final.iteration, final.h,
+                        final.trace if config.trace else None)
 
 
 @functools.partial(jax.jit, static_argnames=("alg", "config"))
@@ -620,6 +733,18 @@ class _BatchState(NamedTuple):
     active: jnp.ndarray         # [R] bool — restart still iterating
     keys: jnp.ndarray           # [R, 2] per-restart minibatch streams
     carry: Any                  # [R, ...] minibatch step-size state
+    trace: Any                  # [R, T] Trace buffers when config.trace
+
+
+def _zero_trace_restarts(config: EngineConfig, params0, r: int):
+    """[R, T]-shaped trace buffers for the vmapped restart fleet."""
+    t = config.max_iters
+    return Trace(
+        objectives=jnp.zeros((r, t), jnp.float32),
+        h=jnp.full((r, t), jnp.inf, jnp.float32),
+        mask=jnp.zeros((r, t), jnp.float32),
+        params=jax.tree.map(
+            lambda a: jnp.zeros((r, t) + a.shape[1:], jnp.float32), params0))
 
 
 def _mask_tree(active, new, old):
@@ -665,6 +790,8 @@ def _restart_loop(alg, config: EngineConfig, params0, h_star, n_total,
         keys=jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
             jax.random.PRNGKey(config.seed), jnp.arange(r)),
         carry=(jax.vmap(alg.zero_carry)(params0) if minibatch else ()),
+        trace=(_zero_trace_restarts(config, params0, r)
+               if config.trace else ()),
     )
 
     def cond(s: _BatchState):
@@ -712,8 +839,29 @@ def _restart_loop(alg, config: EngineConfig, params0, h_star, n_total,
         active = jnp.logical_and(
             a, _live(config, n_iters, hits_out, moved_out))
         carry_out = _mask_tree(a, carry, s.carry) if minibatch else carry
+        if config.trace:
+            # per-restart scatter at each restart's own iteration counter;
+            # stopped restarts are masked back (a write landing at a
+            # clamped index is undone by _mask_tree).  Params recorded
+            # where j was measured — see _fit_loop.
+            rows = jnp.arange(r)
+            idx = s.n_iters
+
+            def scat(buf, val):
+                return _mask_tree(a, buf.at[rows, idx].set(val), buf)
+
+            tr = Trace(
+                objectives=scat(s.trace.objectives, j),
+                h=scat(s.trace.h, h),
+                mask=scat(s.trace.mask, jnp.ones((r,), jnp.float32)),
+                params=jax.tree.map(
+                    scat, s.trace.params,
+                    new_params if minibatch and config.use_h_stop
+                    else s.params))
+        else:
+            tr = s.trace
         return _BatchState(params, j_curr, h_out, hits_out, n_iters,
-                           moved_out, active, keys, carry_out)
+                           moved_out, active, keys, carry_out, tr)
 
     final = jax.lax.while_loop(cond, body, init)
     labels, stats = sweep_labels(final.params)
@@ -728,7 +876,8 @@ def _restart_loop(alg, config: EngineConfig, params0, h_star, n_total,
         h=final.h[best],
     )
     return RestartResult(best=best_result, best_index=best,
-                         objectives=objectives, n_iters=final.n_iters)
+                         objectives=objectives, n_iters=final.n_iters,
+                         traces=final.trace if config.trace else None)
 
 
 @functools.partial(jax.jit, static_argnames=("alg", "config"))
@@ -879,12 +1028,18 @@ class ClusteringEngine:
         params0 = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0)
         rep = jax.tree.map(lambda a: P(*(None,) * jnp.ndim(a)), params0)
         hs = self.config.h_star if h_star is None else h_star
+        # the trace is computed from psum'd stats, so it is replicated —
+        # every shard records the identical history
+        tr_spec = (Trace(P(), P(), P(),
+                         jax.tree.map(lambda a: P(), params0))
+                   if cfg.trace else None)
         fit = jax.shard_map(
             functools.partial(_fit_chunked, alg=self.algorithm, config=cfg),
             mesh=mesh,
             in_specs=(xc_spec, mask_spec, rep, P()),
             out_specs=EngineResult(params=rep, labels=mask_spec,
-                                   objective=P(), n_iters=P(), h=P()),
+                                   objective=P(), n_iters=P(), h=P(),
+                                   trace=tr_spec),
             check_vma=False)
         res = fit(xc, mask, params0, jnp.asarray(hs, jnp.float32))
         return res._replace(labels=self._strip_chunk_padding(res.labels,
@@ -915,6 +1070,9 @@ class ClusteringEngine:
         best_rep = jax.tree.map(lambda a: P(*(None,) * (jnp.ndim(a) - 1)),
                                 params0)
         hs = self.config.h_star if h_star is None else h_star
+        tr_spec = (Trace(P(), P(), P(),
+                         jax.tree.map(lambda a: P(), params0))
+                   if cfg.trace else None)
         fit = jax.shard_map(
             functools.partial(_fit_restarts_chunked, alg=self.algorithm,
                               config=cfg),
@@ -923,7 +1081,8 @@ class ClusteringEngine:
             out_specs=RestartResult(
                 best=EngineResult(params=best_rep, labels=mask_spec,
                                   objective=P(), n_iters=P(), h=P()),
-                best_index=P(), objectives=P(None), n_iters=P(None)),
+                best_index=P(), objectives=P(None), n_iters=P(None),
+                traces=tr_spec),
             check_vma=False)
         rr = fit(xc, mask, params0, jnp.asarray(hs, jnp.float32))
         return rr._replace(best=rr.best._replace(

@@ -161,6 +161,14 @@ def select_model(r, h, families: Sequence[str] = FAMILIES) -> tuple[RegressionMo
     return best, table
 
 
+def rh_from_objectives(objectives: np.ndarray) -> np.ndarray:
+    """h_i = |J_i − J_{i−1}| / |J_{i−1}| over a recorded objective sequence
+    (Eq. 7 applied host-side) — one copy of the conversion every harvest /
+    benchmark consumer used to hand-roll.  Returns h aligned with J[1:]."""
+    js = np.asarray(objectives, np.float64).reshape(-1)
+    return np.abs(np.diff(js)) / np.maximum(np.abs(js[:-1]), 1e-30)
+
+
 def pool_traces(traces: Sequence[tuple[np.ndarray, np.ndarray]]):
     """Concatenate (r_i, h_i) traces from many training groups into one cloud.
 

@@ -4,13 +4,16 @@
         --dataset skin --k 2 --algorithm kmeans --desired-accuracy 0.99
 
 Pipeline: synthesize/load data → random-sample into groups → 10-fold split →
-run training groups to convergence recording (r_i, h_i) → fit the regression
-(model selection or pinned quadratic) → h* = f(r*) → early-stopped production
-clustering (on-device while_loop; shard_map over the data axis when this host
-has multiple devices — full sweeps, minibatch, vmapped multi-restart and the
---use-kernel fused sweeps all compose with --shard; --kernel-backend pins a
-registry backend) → validation: achieved accuracy vs. the full run + cost
-report (Eq. 6/9/10).
+harvest (r_i, h_i) traces from the training groups through the engine's
+on-device trace recording (--train-mode matched harvests under the exact
+production engine configuration; full harvests full-batch sweeps, the
+transfer regime) → fit the regression (model selection or pinned quadratic,
+harvest regime stamped as provenance) → h* = f(r*) → early-stopped
+production clustering (on-device while_loop; shard_map over the data axis
+when this host has multiple devices — full sweeps, minibatch, vmapped
+multi-restart and the --use-kernel fused sweeps all compose with --shard;
+--kernel-backend pins a registry backend) → validation: achieved accuracy
+vs. the full run + cost report (Eq. 6/9/10).
 
 Set ``--devices N`` via XLA host-platform flag *before* launch to exercise
 the distributed path, e.g.:
@@ -33,28 +36,50 @@ from repro.data import load as load_data, spacenet_pixels
 
 
 def train_regression(groups, k: int, algorithm: str, *, max_iters: int,
-                     family: str | None, use_kernel: bool = False):
-    """Run each training group to convergence; fit h(r).  Paper §5.3.1."""
-    traces = []
+                     family: str | None, use_kernel: bool = False,
+                     train_mode: str = "full", production_config=None,
+                     seed: int = 0):
+    """Fit h(r) from the training groups.  Paper §5.3.1, mode-matched.
+
+    Both train modes route through ``repro.core.longtail_train``: the
+    engine's fit drivers record the (J, paired-h, params) trace on device
+    and the accuracy r_i is read off the parameter trajectory — no
+    host-side step loop re-running sweeps.
+
+    ``train_mode="full"`` harvests full-batch traces (the legacy transfer
+    regime: h* rides the paired Eq. 7 stop into whatever configuration
+    production uses); ``train_mode="matched"`` harvests under
+    ``production_config`` itself — same mode, chunk layout, batch draws,
+    decay/ema and kernel routing the threshold will serve — which is what
+    tightens the achieved-accuracy spread (ROADMAP;
+    ``BENCH_longtail_matched.json``).  Either way the harvest regime is
+    stamped into the model's provenance, so
+    ``EngineConfig.from_longtail`` warns on a mismatch at serve time.
+    """
+    from repro.core.engine import EngineConfig
+    from repro.core.longtail_train import TrainingPlan, fit_for_config
     t0 = time.time()
-    for gi in range(groups.shape[0]):
-        x = jnp.asarray(groups[gi])
-        key = jax.random.PRNGKey(gi)
-        c0 = core.kmeans_plus_plus_init(key, x, k)
-        if algorithm == "kmeans":
-            res = core.kmeans_fit_traced(x, c0, max_iters=max_iters,
-                                         use_kernel=use_kernel)
-            r, h = core.trace_to_rh(res, k)
-        else:
-            p0 = em_gmm.init_from_kmeans(x, c0)
-            res = em_gmm.em_fit_traced(x, p0, max_iters=max_iters, tol=1e-12,
-                                       use_kernel=use_kernel)
-            r = core.trace_accuracy(res["labels_history"], k)[1:]
-            js = res["objectives"]
-            h = jnp.abs(js[1:] - js[:-1]) / jnp.maximum(jnp.abs(js[:-1]), 1e-30)
-        traces.append((np.asarray(r), np.asarray(h)))
-    model = core.fit_longtail(traces, algorithm=algorithm, dataset="train",
-                              family=family)
+    if train_mode == "matched":
+        if production_config is None:
+            raise ValueError("train_mode='matched' needs the production "
+                             "EngineConfig to harvest under")
+        cfg = production_config
+    elif train_mode == "full":
+        # full-batch harvest regime; keep the kernel routing (and the pinned
+        # backend) so --use-kernel trains through the same sweep math
+        kw = dict(max_iters=max_iters)
+        src = production_config
+        if src is not None and src.use_kernel:
+            kw.update(use_kernel=True, kernel_backend=src.kernel_backend)
+        elif use_kernel:
+            kw["use_kernel"] = True
+        cfg = EngineConfig(**kw)
+    else:
+        raise ValueError(f"unknown train_mode {train_mode!r} "
+                         "(expected 'matched' or 'full')")
+    plan = TrainingPlan(algorithm=algorithm, k=k, config=cfg, family=family,
+                        max_iters=max_iters, seed=seed)
+    model = fit_for_config(plan, groups)
     return model, time.time() - t0
 
 
@@ -218,6 +243,17 @@ def main():
                     help="pin a registry backend for --use-kernel (auto "
                          "resolves from jax.default_backend(); xla is the "
                          "reference contract)")
+    ap.add_argument("--train-mode", default=None,
+                    choices=["matched", "full"],
+                    help="harvest the h(r) training traces under the "
+                         "production engine configuration ('matched' — "
+                         "mode, chunks, batch draws, kernel routing) or "
+                         "under plain full-batch sweeps ('full', the "
+                         "transfer regime).  Default: matched when --mode "
+                         "minibatch, else full")
+    ap.add_argument("--save-model", default=None, metavar="PATH",
+                    help="write the fitted LongTailModel JSON (regression "
+                         "+ harvest-regime provenance) to PATH")
     ap.add_argument("--instance", default="m5.large")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -250,15 +286,34 @@ def main():
     train_g, prod_g = groups[:args.train_groups], groups[args.train_groups:]
 
     family = None if args.family == "auto" else args.family
+    train_mode = args.train_mode or (
+        "matched" if args.mode == "minibatch" else "full")
+    # the regime the fitted threshold will serve — harvested under in
+    # matched mode, stamped into the model's provenance in both modes
+    from repro.core.engine import EngineConfig
+    cfg_kw = dict(max_iters=args.max_iters, chunks=args.chunks,
+                  use_kernel=args.use_kernel,
+                  stop_when_frozen=(args.algorithm == "kmeans"),
+                  mode=args.mode)
+    if args.use_kernel and args.kernel_backend != "auto":
+        cfg_kw["kernel_backend"] = args.kernel_backend
+    if args.mode == "minibatch":
+        cfg_kw.update(batch_chunks=args.batch_chunks, decay=args.decay)
+    production_cfg = EngineConfig(**cfg_kw)
     model, t_train = train_regression(train_g, args.k, args.algorithm,
                                       max_iters=args.max_iters, family=family,
-                                      use_kernel=args.use_kernel)
+                                      train_mode=train_mode,
+                                      production_config=production_cfg)
     h_star = model.threshold_for(args.desired_accuracy)
-    print(f"regression ({model.regression.family}): coeffs="
-          f"{[round(c, 6) for c in model.regression.coeffs]} "
+    print(f"regression ({model.regression.family}, {train_mode} harvest): "
+          f"coeffs={[round(c, 6) for c in model.regression.coeffs]} "
           f"R²={model.regression.metrics.r2:.4f}")
     print(f"h*({args.desired_accuracy}) = {h_star:.3e}   "
           f"(training took {t_train:.1f}s, amortised — Eq. 9)")
+    if args.save_model:
+        with open(args.save_model, "w") as f:
+            f.write(model.to_json() + "\n")
+        print(f"saved LongTailModel → {args.save_model}")
 
     # production: each group is one clustering task — the paper's unit of
     # work (§5.2 "image = group"; the regression transfers within-regime)

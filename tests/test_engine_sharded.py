@@ -216,3 +216,45 @@ def test_fit_sharded_needs_data_axis(blobs, c0, mesh8):
     eng = ClusteringEngine("kmeans", EngineConfig(max_iters=10, chunks=4))
     with pytest.raises(ValueError, match="no data axis"):
         eng.fit_sharded(blobs, c0, mesh)
+
+
+# --------------------------------------------------------------------------
+# Trace harvesting under shard_map (ISSUE 5): psum'd stats make the
+# recorded (J, h, params) history replicated and device-count invariant
+# --------------------------------------------------------------------------
+
+def test_sharded_trace_matches_single_device(blobs, c0, mesh8):
+    eng = ClusteringEngine("kmeans", EngineConfig(stop_when_frozen=True,
+                                                  trace=True, **MB))
+    ref = eng.fit(blobs, c0, h_star=1e-4)
+    res = eng.fit_sharded(blobs, c0, _data_mesh(mesh8), h_star=1e-4)
+    n = int(ref.n_iters)
+    assert int(res.n_iters) == n
+    np.testing.assert_array_equal(np.asarray(res.trace.mask),
+                                  np.asarray(ref.trace.mask))
+    np.testing.assert_allclose(np.asarray(res.trace.objectives)[:n],
+                               np.asarray(ref.trace.objectives)[:n],
+                               rtol=1e-4)
+    # h is a difference of nearly-equal J's over J: fp32 psum reduction
+    # order shows up as absolute noise around 1e-6, so bound it absolutely
+    np.testing.assert_allclose(np.asarray(res.trace.h)[:n],
+                               np.asarray(ref.trace.h)[:n],
+                               rtol=0.05, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(res.trace.params)[:n],
+                               np.asarray(ref.trace.params)[:n],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sharded_restart_traces_replicated(blobs, mesh8):
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=60, chunks=4, stop_when_frozen=True, trace=True))
+    params0 = eng.init_restarts(jax.random.PRNGKey(3), blobs, K, 3)
+    ref = eng.fit_restarts(blobs, params0, h_star=1e-4)
+    rr = eng.fit_restarts_sharded(blobs, params0, _data_mesh(mesh8),
+                                  h_star=1e-4)
+    np.testing.assert_array_equal(np.asarray(rr.traces.mask.sum(axis=1),
+                                             np.int32),
+                                  np.asarray(rr.n_iters))
+    np.testing.assert_allclose(np.asarray(rr.traces.objectives),
+                               np.asarray(ref.traces.objectives),
+                               rtol=1e-4, atol=1e-4)

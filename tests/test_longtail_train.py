@@ -1,0 +1,214 @@
+"""Mode-matched long-tail training (ISSUE 5): engine trace invariants,
+configuration-matched fits, and the provenance contract."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.earlystop import change_rate
+from repro.core.engine import ClusteringEngine, EngineConfig
+from repro.core.longtail_train import (TrainingPlan, config_fingerprint,
+                                       fit_for_config, harvest_config,
+                                       harvest_traces,
+                                       engine_trace_to_rh)
+
+
+def _blobs(n=3000, d=4, k=3, seed=0, spread=6.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, spread, (k, d))
+    x = np.concatenate([c + rng.normal(0, 1.0, (n // k, d)) for c in centers])
+    return jnp.asarray(x[rng.permutation(len(x))].astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return _blobs()
+
+
+# --------------------------------------------------------------------------
+# Trace invariants (the new fit-driver return contract)
+# --------------------------------------------------------------------------
+
+def test_full_mode_h_matches_change_rate_recomputed_from_j(blobs):
+    """Harvested h_i must equal earlystop.change_rate applied to the
+    recorded J trace — the trace is the Eq. 7 source of truth."""
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=50, trace=True, use_h_stop=False, stop_when_frozen=True))
+    res = eng.fit(blobs, eng.init(jax.random.PRNGKey(0), blobs, 3))
+    tr = res.trace
+    n = int(res.n_iters)
+    assert n >= 2 and float(tr.mask.sum()) == n
+    js = np.asarray(tr.objectives)
+    h = np.asarray(tr.h)
+    rec = np.asarray(change_rate(jnp.asarray(js[1:n]), jnp.asarray(js[:n - 1])))
+    np.testing.assert_allclose(h[1:n], rec, rtol=1e-6)
+    assert np.isinf(h[0])                       # Eq. 7 starts at i = 2
+    assert np.all(tr.mask[n:] == 0)             # nothing recorded past stop
+
+
+def test_minibatch_paired_h_finite_and_nonnegative(blobs):
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        mode="minibatch", chunks=8, batch_chunks=2, patience=5,
+        max_iters=60, trace=True))
+    res = eng.fit(blobs, eng.init(jax.random.PRNGKey(1), blobs, 3),
+                  h_star=1e-5)
+    n = int(res.n_iters)
+    h = np.asarray(res.trace.h)[:n]
+    assert n >= 1
+    assert np.all(np.isfinite(h)), h            # paired from step one
+    assert np.all(h >= 0.0), h
+
+
+def test_minibatch_unpaired_trace_keeps_measured_at_invariant(blobs):
+    """With the h predicate off, minibatch skips the paired pass: the trace
+    must record the PRE-update params (where the subsample objective was
+    measured) and leave h at inf — there is no Eq. 7 signal to fake."""
+    cfg = EngineConfig(mode="minibatch", chunks=8, batch_chunks=2,
+                       max_iters=5, use_h_stop=False, trace=True, seed=3)
+    eng = ClusteringEngine("kmeans", cfg)
+    c0 = eng.init(jax.random.PRNGKey(4), blobs, 3)
+    res = eng.fit(blobs, c0)
+    tr = res.trace
+    assert np.all(np.isinf(np.asarray(tr.h)[:5]))
+    # index 0 holds the objective/params measured BEFORE the first update:
+    # the recorded params must equal the initial centroids
+    np.testing.assert_allclose(np.asarray(tr.params)[0], np.asarray(c0),
+                               rtol=1e-6)
+    # and harvesting yields an empty cloud rather than garbage pairs
+    r, h = engine_trace_to_rh(tr, blobs, algorithm="kmeans", k=3)
+    assert r.size == 0 and h.size == 0
+
+
+def test_restart_traces_cover_every_restart(blobs):
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=40, trace=True, use_h_stop=False, stop_when_frozen=True))
+    rr = eng.fit_restarts(blobs, key=jax.random.PRNGKey(2), k=3, restarts=4)
+    tr = rr.traces
+    assert tr.objectives.shape[0] == 4
+    # each restart's mask counts exactly its own iterations
+    np.testing.assert_array_equal(np.asarray(tr.mask.sum(axis=1), np.int32),
+                                  np.asarray(rr.n_iters))
+    # stopped restarts stay frozen: no writes beyond their own n_iters
+    for ri in range(4):
+        n = int(rr.n_iters[ri])
+        assert np.all(np.asarray(tr.mask)[ri, n:] == 0)
+
+
+def test_trace_off_by_default(blobs):
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=10, use_h_stop=False, stop_when_frozen=True))
+    assert eng.fit(blobs, eng.init(jax.random.PRNGKey(0), blobs, 3)).trace \
+        is None
+    assert eng.fit_restarts(blobs, key=jax.random.PRNGKey(0), k=3,
+                            restarts=2).traces is None
+
+
+def test_trace_to_rh_accuracy_is_rand_against_final(blobs):
+    """r_i from the recorded parameter trajectory must end at 1 (the final
+    partition against itself) and stay within [0, 1]."""
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=50, trace=True, use_h_stop=False, stop_when_frozen=True))
+    res = eng.fit(blobs, eng.init(jax.random.PRNGKey(3), blobs, 3))
+    r, h = engine_trace_to_rh(res.trace, blobs, algorithm="kmeans", k=3)
+    assert r.shape == h.shape and r.size >= 1
+    assert np.all((r >= 0.0) & (r <= 1.0))
+    assert r[-1] == pytest.approx(1.0)
+    assert np.all(np.isfinite(h))
+
+
+# --------------------------------------------------------------------------
+# Matched fits
+# --------------------------------------------------------------------------
+
+def test_matched_fit_threshold_monotone_in_rstar(blobs):
+    groups = np.stack([np.asarray(_blobs(seed=s)) for s in range(3)])
+    prod = EngineConfig(mode="minibatch", chunks=8, batch_chunks=2,
+                        patience=5, max_iters=80)
+    model = fit_for_config(TrainingPlan(algorithm="kmeans", k=3, config=prod,
+                                        family="quadratic"), groups)
+    ths = [model.threshold_for(a)
+           for a in (0.80, 0.90, 0.95, 0.99, 0.999)]
+    assert all(a >= b - 1e-15 for a, b in zip(ths, ths[1:])), ths
+    assert ths[-1] > 0                           # floored, never <= 0
+
+
+def test_em_harvest_traces(blobs):
+    traces = harvest_traces(TrainingPlan(
+        algorithm="em", k=3, config=EngineConfig(max_iters=40)),
+        np.asarray(blobs)[None])
+    (r, h), = traces
+    assert r.size >= 1
+    assert np.all(np.isfinite(h)) and np.all(h >= 0)
+    assert np.all((r >= 0) & (r <= 1))
+
+
+def test_restart_plan_harvests_r_traces_per_group(blobs):
+    traces = harvest_traces(TrainingPlan(
+        algorithm="kmeans", k=3, config=EngineConfig(max_iters=40),
+        restarts=3), np.asarray(blobs)[None])
+    assert len(traces) == 3                      # one trace per restart
+
+
+# --------------------------------------------------------------------------
+# Provenance contract
+# --------------------------------------------------------------------------
+
+def test_config_mismatch_warning_fires(blobs):
+    prod = EngineConfig(mode="minibatch", chunks=8, batch_chunks=2,
+                        patience=5, max_iters=60)
+    model = fit_for_config(TrainingPlan(algorithm="kmeans", k=3, config=prod,
+                                        family="quadratic"),
+                           np.asarray(blobs)[None])
+    assert model.engine_config["mode"] == "minibatch"
+    with pytest.warns(UserWarning, match="mode-matched"):
+        EngineConfig.from_longtail(model, 0.95, max_iters=60)  # full mode
+    # serving the stamped regime is silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        EngineConfig.from_longtail(model, 0.95, mode="minibatch", chunks=8,
+                                   batch_chunks=2, patience=5, max_iters=60,
+                                   seed=7)
+
+
+def test_legacy_model_without_provenance_never_warns():
+    r = np.linspace(0.3, 1.0, 50)
+    h = 1.8 - 3.6 * r + 1.8 * r * r
+    model = core.fit_longtail([(r, h)], algorithm="kmeans", dataset="t",
+                              family="quadratic")
+    assert model.engine_config is None
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        EngineConfig.from_longtail(model, 0.95, max_iters=10)
+
+
+def test_provenance_json_roundtrip(blobs):
+    prod = EngineConfig(mode="minibatch", chunks=4, batch_chunks=1,
+                        decay=0.9, max_iters=40)
+    model = fit_for_config(TrainingPlan(algorithm="kmeans", k=3, config=prod,
+                                        family="quadratic"),
+                           np.asarray(blobs)[None])
+    again = core.LongTailModel.from_json(model.to_json())
+    assert again.engine_config == model.engine_config
+    assert again.engine_config == config_fingerprint(prod)
+
+
+def test_harvest_config_keeps_regime_reaims_stop():
+    prod = EngineConfig(mode="minibatch", chunks=8, batch_chunks=2,
+                        decay=0.9, ema=0.5, patience=2, max_iters=60,
+                        h_star=1e-3, stop_when_frozen=True)
+    hc = harvest_config(prod, "kmeans", seed=5)
+    assert hc.trace and hc.h_star == 0.0 and not hc.stop_when_frozen
+    assert hc.seed == 5 and hc.patience >= 3
+    for f in ("mode", "chunks", "batch_chunks", "decay", "ema",
+              "use_kernel", "kernel_backend"):
+        assert getattr(hc, f) == getattr(prod, f), f
+    # full-mode kmeans: frozen-centroid stop, no h predicate (fp32 J
+    # plateaus must not end the harvest before the Lloyd fixed point)
+    hk = harvest_config(EngineConfig(max_iters=60), "kmeans")
+    assert hk.trace and not hk.use_h_stop and hk.stop_when_frozen
+    # full-mode EM: tolerance stop
+    he = harvest_config(EngineConfig(max_iters=60), "em")
+    assert he.use_h_stop and 0 < he.h_star <= 1e-10
