@@ -739,6 +739,125 @@ def longtail_matched():
 
 
 # --------------------------------------------------------------------------
+# Clustering-as-a-service: the assignment server (ISSUE 6 tentpole)
+# --------------------------------------------------------------------------
+
+@bench("serve_cluster")
+def serve_cluster():
+    """Continuous-batching assignment server: per-model latency,
+    throughput, QPS and the recompile-count claim.
+
+    Two artifacts with real harvest provenance (minibatch k-means +
+    full-batch EM, ``launch.serve_cluster.demo_artifacts``) serve a mixed
+    stream of assignment batches in several drain waves, plus incremental
+    fit jobs.  Persists ``BENCH_serve_cluster.json`` at the repo root.
+    Tracked claims (the CI ``longtail-artifacts`` gate):
+
+      · one compiled program per (model, bucket) — the assign jit cache
+        never exceeds the bucket count, no matter how many distinct batch
+        sizes arrive;
+      · served labels match ``ClusteringEngine`` batch assignment
+        bit-for-bit (padding never leaks into results).
+    """
+    import jax
+    import numpy as np
+    from repro.core.engine import ClusteringEngine
+    from repro.launch.serve_cluster import demo_artifacts
+    from repro.serving import AssignRequest, ClusterServer, FitRequest, \
+        ModelRegistry
+
+    buckets = (256, 1024, 4096)
+    registry = ModelRegistry(devices=len(jax.devices()), fit_steps=20)
+    artifacts = demo_artifacts(seed=0)
+    keys = {a.name: registry.register(a) for a in artifacts}
+    server = ClusterServer(registry, buckets=buckets)
+    for key in keys.values():
+        server.warmup(key)              # steady-state latencies only
+
+    rng = np.random.default_rng(0)
+    d = artifacts[0].d
+    names = list(keys)
+    rid = 0
+    labels_match = True
+    parity_checks = 0
+    for wave in range(6):
+        wave_reqs = []
+        for _ in range(12):
+            name = names[rng.integers(0, len(names))]
+            n = int(rng.integers(20, 3000))
+            wave_reqs.append(AssignRequest(
+                x=rng.normal(0, 4, (n, d)).astype(np.float32),
+                model_key=keys[name], rid=rid))
+            rid += 1
+        if wave % 3 == 2:               # fits are rare — the paper's premise
+            name = names[rng.integers(0, len(names))]
+            wave_reqs.append(FitRequest(
+                x=rng.normal(0, 4, (512, d)).astype(np.float32),
+                model_key=keys[name], rid=rid))
+            rid += 1
+        for r in wave_reqs:
+            server.submit(r)
+        out = server.drain()
+        # spot-check label parity against the engine's batch assignment
+        for r in wave_reqs[:2]:
+            if not isinstance(r, AssignRequest):
+                continue
+            entry = server.registry[r.model_key]
+            eng = ClusteringEngine(entry.artifact.algorithm, entry.config)
+            _, ref, _ = eng.step(r.x, entry.params)
+            labels_match &= bool(np.array_equal(out[r.rid], np.asarray(ref)))
+            parity_checks += 1
+
+    compiled = server.compiled_programs()
+    one_per_bucket = all(c["assign"] <= len(buckets)
+                         for c in compiled.values())
+    rows = []
+    for a in artifacts:
+        key = keys[a.name]
+        m = server.metrics.summary()[key]
+        fit_m = server.metrics.summary().get(f"{key}#fit")
+        rows.append({
+            "model": a.name, "algorithm": a.algorithm,
+            "requests": m["requests"], "batches": m["batches"],
+            "points": m["points"],
+            "p50_latency_ms": round(m["p50_latency_ms"], 3),
+            "p99_latency_ms": round(m["p99_latency_ms"], 3),
+            "throughput_points_per_s":
+                round(m["throughput_points_per_s"], 1),
+            "qps": round(m["qps"], 2),
+            "fit_jobs": fit_m["requests"] if fit_m else 0,
+            "compiled_assign": compiled[key]["assign"],
+            "compiled_fit": compiled[key]["fit"],
+        })
+
+    payload = {
+        "benchmark": "serve_cluster",
+        "buckets": list(buckets),
+        "devices": len(jax.devices()),
+        "parity_checks": parity_checks,
+        "claims": {
+            "one_program_per_model_bucket": bool(one_per_bucket),
+            "served_labels_match_engine": bool(labels_match),
+        },
+        "note": "latencies are steady-state (buckets pre-compiled via "
+                "warmup); one compiled assign program per (model, bucket) "
+                "regardless of arriving batch sizes; fit jobs advance the "
+                "registered params under the artifact's own engine regime",
+        "models": {a.name: {"key": keys[a.name],
+                            "provenance": a.model.engine_config}
+                   for a in artifacts},
+        "rows": rows,
+    }
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_serve_cluster.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return rows
+
+
+# --------------------------------------------------------------------------
 # Roofline table (reads experiments/dryrun/*.json → §Roofline source data)
 # --------------------------------------------------------------------------
 

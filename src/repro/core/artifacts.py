@@ -1,0 +1,121 @@
+"""Fitted clustering artifacts: the unit the assignment server registers.
+
+The paper's economics rest on the asymmetry between rare, expensive
+*fitting* and cheap, repeated *application* of what the fit produced
+(§5.4: "the training process runs once; the regression is applied
+repeatedly").  A :class:`ClusterArtifact` is the applied side's currency:
+the converged cluster parameters (centroids for k-means, ``GMMParams``
+for EM) together with the :class:`~repro.core.earlystop.LongTailModel`
+whose stamped ``engine_config`` provenance says exactly which engine
+regime both were produced under.
+
+``fingerprint_key`` flattens that provenance (the
+``longtail_train.config_fingerprint`` dict) into the registry key the
+serving layer indexes models by — two artifacts harvested under the same
+regime share a fingerprint and differ only by ``name``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+import numpy as np
+
+from .earlystop import LongTailModel
+from .em_gmm import GMMParams
+
+
+def fingerprint_key(prov: dict) -> str:
+    """Deterministic flat string for a provenance fingerprint dict."""
+    return "|".join(f"{k}={prov[k]}" for k in sorted(prov))
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterArtifact:
+    """One fitted model as served: parameters + stop-model + provenance.
+
+    ``params`` is a host-side copy (``np.ndarray`` centroids [K, D] for
+    k-means; ``GMMParams`` of arrays for EM) — the registry places it on
+    device at registration.  ``desired_accuracy`` is the r* the artifact
+    was certified for; incremental fit jobs stop at
+    ``model.threshold_for(desired_accuracy)``.
+    """
+    name: str
+    algorithm: str                   # "kmeans" | "em"
+    params: Any
+    model: LongTailModel
+    desired_accuracy: float = 0.95
+
+    def __post_init__(self):
+        if self.algorithm not in ("kmeans", "em"):
+            raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        if self.algorithm == "em" and not isinstance(self.params, GMMParams):
+            raise ValueError("em artifacts carry GMMParams")
+
+    @property
+    def k(self) -> int:
+        if self.algorithm == "kmeans":
+            return int(np.shape(self.params)[0])
+        return int(np.shape(self.params.means)[0])
+
+    @property
+    def d(self) -> int:
+        if self.algorithm == "kmeans":
+            return int(np.shape(self.params)[1])
+        return int(np.shape(self.params.means)[1])
+
+    # ---- persistence (JSON next to the LongTailModel checkpoints) --------
+    def to_json(self) -> str:
+        if self.algorithm == "kmeans":
+            params = {"centroids": np.asarray(self.params,
+                                              np.float32).tolist()}
+        else:
+            params = {"means": np.asarray(self.params.means,
+                                          np.float32).tolist(),
+                      "var": np.asarray(self.params.var,
+                                        np.float32).tolist(),
+                      "log_w": np.asarray(self.params.log_w,
+                                          np.float32).tolist()}
+        return json.dumps({
+            "name": self.name,
+            "algorithm": self.algorithm,
+            "desired_accuracy": self.desired_accuracy,
+            "params": params,
+            "model": json.loads(self.model.to_json()),
+        }, indent=2)
+
+    @staticmethod
+    def from_json(s: str) -> "ClusterArtifact":
+        d = json.loads(s)
+        p = d["params"]
+        if d["algorithm"] == "kmeans":
+            params: Any = np.asarray(p["centroids"], np.float32)
+        else:
+            params = GMMParams(means=np.asarray(p["means"], np.float32),
+                               var=np.asarray(p["var"], np.float32),
+                               log_w=np.asarray(p["log_w"], np.float32))
+        return ClusterArtifact(
+            name=d["name"], algorithm=d["algorithm"], params=params,
+            model=LongTailModel.from_json(json.dumps(d["model"])),
+            desired_accuracy=float(d.get("desired_accuracy", 0.95)))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @staticmethod
+    def load(path: str) -> "ClusterArtifact":
+        with open(path) as f:
+            return ClusterArtifact.from_json(f.read())
+
+
+def load_registry_dir(path: str) -> list[ClusterArtifact]:
+    """Load every ``*.json`` artifact under ``path`` (sorted by filename) —
+    the on-disk registry layout the serve CLI consumes."""
+    out = []
+    for fn in sorted(os.listdir(path)):
+        if fn.endswith(".json"):
+            out.append(ClusterArtifact.load(os.path.join(path, fn)))
+    return out

@@ -68,6 +68,20 @@ from . import kmeans as _km
 _EPS = 1e-30
 
 
+class ProvenanceMismatchError(ValueError):
+    """A fitted ``LongTailModel`` is being routed into an engine regime that
+    does not match the configuration its (r, h) traces were harvested under.
+
+    Raised by ``EngineConfig.from_longtail(..., strict=True)`` — the serving
+    registry's admission path — instead of the advisory ``UserWarning`` the
+    non-strict research path emits.  ``diff`` maps each mismatched field to
+    ``(fitted, production)``."""
+
+    def __init__(self, message: str, diff: dict):
+        super().__init__(message)
+        self.diff = diff
+
+
 # --------------------------------------------------------------------------
 # Algorithm protocol: init / chunk_stats / update / objective (+ kernels)
 # --------------------------------------------------------------------------
@@ -337,17 +351,21 @@ class EngineConfig:
         return d
 
     @classmethod
-    def from_longtail(cls, model, desired_accuracy: float, **kw):
+    def from_longtail(cls, model, desired_accuracy: float,
+                      strict: bool = False, **kw):
         """Route a fitted LongTailModel through the engine: h* = f(r*).
 
         When the model carries engine-config provenance (it was fitted by
         ``repro.core.longtail_train`` on traces harvested under a concrete
         ``EngineConfig``), the production config built here is compared
-        against it and a loud ``UserWarning`` fires on a regime mismatch —
-        a transferred h* still *works* (the paired stop keeps the Eq. 7
+        against it.  A regime mismatch fires a loud ``UserWarning`` — a
+        transferred h* still *works* (the paired stop keeps the Eq. 7
         scale compatible) but is not mode-matched, which widens the
         achieved-accuracy spread (ROADMAP; ``BENCH_longtail_matched.json``
-        quantifies it).
+        quantifies it).  ``strict=True`` upgrades the warning to
+        :class:`ProvenanceMismatchError` — the serving registry's admission
+        contract, where a silently mis-calibrated threshold must never
+        reach production traffic.
         """
         cfg = cls(h_star=float(model.threshold_for(desired_accuracy)), **kw)
         prov = getattr(model, "engine_config", None)
@@ -358,17 +376,20 @@ class EngineConfig:
             diff = {f: (prov[f], getattr(cfg, f)) for f in fields
                     if f in prov and prov[f] != getattr(cfg, f)}
             if diff:
-                import warnings
                 detail = ", ".join(f"{f}: fitted={a!r} production={b!r}"
                                    for f, (a, b) in sorted(diff.items()))
-                warnings.warn(
+                msg = (
                     "LongTailModel was fitted under a different engine "
                     f"configuration than it is now serving ({detail}); "
                     "h* transfers via the paired Eq. 7 stop but is not "
                     "mode-matched — re-fit with "
                     "repro.core.longtail_train.fit_for_config under the "
                     "production EngineConfig to tighten the achieved-"
-                    "accuracy spread", UserWarning, stacklevel=2)
+                    "accuracy spread")
+                if strict:
+                    raise ProvenanceMismatchError(msg, diff)
+                import warnings
+                warnings.warn(msg, UserWarning, stacklevel=2)
         return cfg
 
 

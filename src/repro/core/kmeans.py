@@ -20,7 +20,6 @@ pass over N/C-sized pieces (see the engine docstring).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -232,8 +231,9 @@ def trace_accuracy(labels_history, k: int):
     """r_i = Rand(P_i, P_f) for every recorded iteration (paper §3.2)."""
     from .rand_index import rand_index
     final = labels_history[-1]
-    rand = jax.jit(functools.partial(rand_index, ka=k, kb=k))
-    return jnp.asarray([float(rand(labels_history[i], final))
+    # host call → the exact integer path in rand_index (no jit: tracing
+    # would demote the pair counts to float32)
+    return jnp.asarray([float(rand_index(labels_history[i], final, ka=k, kb=k))
                         for i in range(labels_history.shape[0])])
 
 

@@ -21,8 +21,12 @@ serve.  This module is that trainer:
     Accuracy r_i is then read off the recorded parameter trajectory: one
     batched assignment pass per trace (``lax.map`` over the [T, ...]
     params history) labels every iteration's partition, and r_i is the
-    Rand index against the trace's own final partition — the paper's §3.2
-    definition, computed without re-running a single training sweep.
+    Rand index against the *full-batch reference partition* — the
+    paper's §3.2 definition (accuracy relative to the converged result).
+    Full-mode harvests already end at that partition, so they
+    self-reference; minibatch harvests run one cheap offline full-batch
+    fit per training group (``reference_partition``) so the fit target
+    aligns exactly with the validation metric.
 
   · ``fit_for_config`` pools those traces, runs the Eq. 8 family
     comparison (or a pinned family) and stamps the harvest regime into
@@ -153,17 +157,22 @@ def _trace_rand(labels_hist, ref_labels, k: int):
     return jax.lax.map(one, labels_hist)
 
 
-def engine_trace_to_rh(trace: Trace, x, *, algorithm: str,
-                       k: int) -> tuple[np.ndarray, np.ndarray]:
+def engine_trace_to_rh(trace: Trace, x, *, algorithm: str, k: int,
+                       ref_labels=None) -> tuple[np.ndarray, np.ndarray]:
     """(r_i, h_i) pairs from one engine trace (§3.2 accuracy + Eq. 7 rate).
 
     Distinct name from the legacy ``core.trace_to_rh`` (which consumes a
     ``kmeans_fit_traced`` result dict) — this one consumes the engine's
-    :class:`Trace`.  The reference partition is the trace's own final
-    recorded state, so a restart's accuracy is measured against *its*
-    converged partition (the legacy semantics).  Rows with no iteration
-    behind them (mask 0) or an undefined rate (h = inf at index 0 of a
-    full-mode trace) are dropped.
+    :class:`Trace`.  ``ref_labels`` is the reference partition accuracy is
+    measured against; ``None`` falls back to the trace's own final
+    recorded state (the legacy semantics — exact for full-mode harvests,
+    which run to the converged partition anyway).  ``harvest_traces``
+    passes the *full-batch* reference partition for minibatch harvests,
+    where the trace's own endpoint is a subsample approximation and
+    self-reference would inflate every r_i (the ROADMAP carry-over this
+    fixes): the fit target then aligns exactly with the validation metric.
+    Rows with no iteration behind them (mask 0) or an undefined rate
+    (h = inf at index 0 of a full-mode trace) are dropped.
     """
     mask = np.asarray(trace.mask)
     h = np.asarray(trace.h, np.float64)
@@ -176,10 +185,32 @@ def engine_trace_to_rh(trace: Trace, x, *, algorithm: str,
     params = jax.tree.map(lambda a: a[:m], trace.params)
     labels_hist = _trace_labels(jnp.asarray(x, jnp.float32), params,
                                 algorithm)
-    r = np.asarray(_trace_rand(labels_hist, labels_hist[n_it - 1], k),
-                   np.float64)
+    ref = (labels_hist[n_it - 1] if ref_labels is None
+           else jnp.asarray(ref_labels, jnp.int32))
+    r = np.asarray(_trace_rand(labels_hist, ref, k), np.float64)
     valid = (np.arange(m) < n_it) & np.isfinite(h[:m])
     return r[valid], h[:m][valid]
+
+
+def reference_config(production: EngineConfig, algorithm: str,
+                     max_iters: int | None = None) -> EngineConfig:
+    """The full-batch reference regime for a production config: same
+    memory layout and kernel routing, minibatch knobs reset, stop re-aimed
+    at full convergence (frozen centroids / EM tolerance), no trace."""
+    full = dataclasses.replace(
+        production, mode="full", batch_chunks=0, decay=1.0, seed=0,
+        ema=0.0, patience=1)
+    cfg = harvest_config(full, algorithm, max_iters=max_iters)
+    return dataclasses.replace(cfg, trace=False)
+
+
+def reference_partition(plan: TrainingPlan, x, params0) -> jnp.ndarray:
+    """One cheap offline full-batch fit → the [N] reference labels the
+    matched harvest measures accuracy against."""
+    cfg = reference_config(plan.config, plan.algorithm,
+                           max_iters=plan.max_iters)
+    eng = ClusteringEngine(plan.algorithm, cfg)
+    return eng.fit(x, params0).labels
 
 
 def harvest_traces(plan: TrainingPlan, groups,
@@ -191,6 +222,14 @@ def harvest_traces(plan: TrainingPlan, groups,
     (``fit_sharded`` / ``fit_restarts_sharded``) — the trace is computed
     from psum'd stats, so it comes back replicated and identical to the
     single-device harvest up to fp32 reduction order.
+
+    Minibatch harvests measure r against the group's *full-batch
+    reference partition* (one cheap offline full-batch fit per group,
+    seeded from the same init) — the trace's own subsample endpoint is
+    not the partition production accuracy is validated against, and
+    self-reference systematically inflated r (ROADMAP carry-over).
+    Full-mode harvests run to the converged partition already, so their
+    self-reference IS the full-batch reference and no extra fit runs.
     """
     out: list[tuple[np.ndarray, np.ndarray]] = []
     for gi in range(len(groups)):
@@ -201,23 +240,30 @@ def harvest_traces(plan: TrainingPlan, groups,
                   if plan.config.mode == "minibatch" else None))
         eng = ClusteringEngine(plan.algorithm, cfg)
         key = jax.random.PRNGKey(plan.seed + gi)
+        needs_ref = plan.config.mode == "minibatch"
         if plan.restarts > 1:
             keys = jax.random.split(key, plan.restarts)
             inits = [_group_init(plan.algorithm, kk, x, plan.k, cfg.chunks)
                      for kk in keys]
             params0 = jax.tree.map(lambda *ls: jnp.stack(ls), *inits)
+            ref = (reference_partition(plan, x, inits[0])
+                   if needs_ref else None)
             rr = (eng.fit_restarts_sharded(x, params0, mesh)
                   if mesh is not None else eng.fit_restarts(x, params0))
             for ri in range(plan.restarts):
                 tr = jax.tree.map(lambda a: a[ri], rr.traces)
                 out.append(engine_trace_to_rh(
-                    tr, x, algorithm=plan.algorithm, k=plan.k))
+                    tr, x, algorithm=plan.algorithm, k=plan.k,
+                    ref_labels=ref))
         else:
             params0 = _group_init(plan.algorithm, key, x, plan.k, cfg.chunks)
+            ref = (reference_partition(plan, x, params0)
+                   if needs_ref else None)
             res = (eng.fit_sharded(x, params0, mesh)
                    if mesh is not None else eng.fit(x, params0))
             out.append(engine_trace_to_rh(
-                res.trace, x, algorithm=plan.algorithm, k=plan.k))
+                res.trace, x, algorithm=plan.algorithm, k=plan.k,
+                ref_labels=ref))
     return out
 
 

@@ -96,6 +96,37 @@ def tile_policy(backend: str) -> TilePolicy:
 
 
 # --------------------------------------------------------------------------
+# Batch buckets (the serving layer's fixed compile shapes)
+# --------------------------------------------------------------------------
+
+DEFAULT_BUCKETS = (256, 1024, 4096, 16384)
+
+
+def bucket_for(n: int, buckets=DEFAULT_BUCKETS) -> int:
+    """Smallest bucket that holds ``n`` rows.
+
+    The serving layer pads every drained request batch up to a bucket so
+    XLA sees a closed set of shapes — one compiled program per (model,
+    bucket) instead of one per arriving batch size.  Requests larger than
+    the largest bucket are rejected at admission (the queue never reaches
+    here with one).
+    """
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"batch of {n} rows exceeds the largest bucket "
+                     f"{buckets[-1]}; admission should have rejected it")
+
+
+def pad_to_bucket(x, bucket: int):
+    """[N, D] → ([bucket, D], mask [bucket]) zero-padded; mask 0 marks the
+    padding rows the ops' mask operand drops from labels and statistics."""
+    n = x.shape[0]
+    xp = jnp.pad(jnp.asarray(x, jnp.float32), ((0, bucket - n), (0, 0)))
+    return xp, (jnp.arange(bucket) < n).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
 # Chunk layouts
 # --------------------------------------------------------------------------
 

@@ -1,1 +1,3 @@
 from .serve_loop import Server, Request
+from .batching import AssignRequest, FitRequest, ServeMetrics, pack_batches
+from .cluster_server import ClusterServer, ModelRegistry

@@ -6,7 +6,14 @@ stalling the others (continuous batching at slot granularity — the decode
 step shape never changes, so XLA compiles exactly two programs: prefill and
 decode).
 
-Sampling: greedy or temperature; per-slot EOS/len stop.
+Sampling: greedy or temperature; per-slot EOS/len stop.  The EOS token is a
+stop signal, not content: it is never included in the returned tokens.
+
+Admission contract (shared with the cluster assignment server): requests are
+validated *before* any device work — an empty prompt, a prompt with
+``len(prompt) >= max_seq`` (the KV-cache splice would silently clamp and
+corrupt the cache), or ``max_new_tokens < 1`` raises ``ValueError`` naming
+the offending request.
 """
 from __future__ import annotations
 
@@ -70,18 +77,52 @@ class Server:
         probs = probs / probs.sum()
         return int(self.rng.choice(probs.shape[0], p=probs))
 
+    def admit_check(self, req: Request) -> None:
+        """Validate a request before any device work (loud admission).
+
+        Raises ``ValueError`` for prompts the cache splice cannot hold —
+        the old behaviour let ``dynamic_update_slice`` clamp the start
+        index and silently corrupt neighbouring slots' caches.
+        """
+        n = len(req.prompt)
+        if n < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if n >= self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt length {n} >= max_seq "
+                f"{self.max_seq} — the KV cache cannot hold it")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1, got "
+                f"{req.max_new_tokens}")
+
     def generate(self, requests: list[Request]) -> dict[int, list[int]]:
-        """Run all requests to completion; returns {rid: generated tokens}."""
+        """Run all requests to completion; returns {rid: generated tokens}.
+
+        The EOS token (when configured) terminates a sequence and is
+        stripped — returned token lists never contain ``eos_id``.
+        """
+        for req in requests:
+            self.admit_check(req)
         queue = list(requests)
         slots: list[dict | None] = [None] * self.n_slots
         done: dict[int, list[int]] = {}
 
         def admit():
             for i in range(self.n_slots):
-                if slots[i] is None and queue:
+                while slots[i] is None and queue:
                     req = queue.pop(0)
                     last_logits = self._fill_slot(i, req.prompt)
                     tok = self._sample(last_logits, req.temperature)
+                    # the prefill-sampled token gets the same stop checks
+                    # as decode steps: EOS ends (and is stripped from) the
+                    # output, and max_new_tokens==1 completes immediately
+                    if self.eos_id is not None and tok == self.eos_id:
+                        done[req.rid] = []
+                        continue
+                    if req.max_new_tokens <= 1:
+                        done[req.rid] = [tok]
+                        continue
                     slots[i] = {"req": req, "pos": len(req.prompt),
                                 "out": [tok], "next": tok}
 
@@ -102,11 +143,15 @@ class Server:
             for i in active:
                 s = slots[i]
                 tok = self._sample(logits[i], s["req"].temperature)
+                s["pos"] += 1
+                if self.eos_id is not None and tok == self.eos_id:
+                    # stop signal, not content — do not append
+                    done[s["req"].rid] = s["out"]
+                    slots[i] = None
+                    continue
                 s["out"].append(tok)
                 s["next"] = tok
-                s["pos"] += 1
-                hit_eos = self.eos_id is not None and tok == self.eos_id
-                if (len(s["out"]) >= s["req"].max_new_tokens or hit_eos
+                if (len(s["out"]) >= s["req"].max_new_tokens
                         or s["pos"] >= self.max_seq - 1):
                     done[s["req"].rid] = s["out"]
                     slots[i] = None

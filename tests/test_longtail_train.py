@@ -12,7 +12,8 @@ from repro.core.earlystop import change_rate
 from repro.core.engine import ClusteringEngine, EngineConfig
 from repro.core.longtail_train import (TrainingPlan, config_fingerprint,
                                        fit_for_config, harvest_config,
-                                       harvest_traces,
+                                       harvest_traces, reference_config,
+                                       reference_partition,
                                        engine_trace_to_rh)
 
 
@@ -117,6 +118,61 @@ def test_trace_to_rh_accuracy_is_rand_against_final(blobs):
     assert np.all((r >= 0.0) & (r <= 1.0))
     assert r[-1] == pytest.approx(1.0)
     assert np.all(np.isfinite(h))
+
+
+def test_trace_to_rh_accepts_explicit_reference(blobs):
+    """ref_labels replaces the self-reference: against the true final
+    partition r ends at 1; against a shuffled partition it must not."""
+    eng = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=50, trace=True, use_h_stop=False, stop_when_frozen=True))
+    res = eng.fit(blobs, eng.init(jax.random.PRNGKey(3), blobs, 3))
+    r_self, _ = engine_trace_to_rh(res.trace, blobs, algorithm="kmeans", k=3)
+    r_ref, _ = engine_trace_to_rh(res.trace, blobs, algorithm="kmeans", k=3,
+                                  ref_labels=np.asarray(res.labels))
+    np.testing.assert_allclose(r_ref, r_self, rtol=1e-6)
+    perm = np.random.default_rng(0).permutation(np.asarray(res.labels))
+    r_bad, _ = engine_trace_to_rh(res.trace, blobs, algorithm="kmeans", k=3,
+                                  ref_labels=perm)
+    assert r_bad[-1] < 0.99
+
+
+def test_minibatch_harvest_measures_r_against_fullbatch_reference(blobs):
+    """ROADMAP carry-over: the minibatch harvest's r must be computed
+    against the group's full-batch partition, not the trace's own
+    subsample endpoint — harvest_traces output must match an explicit
+    reference_partition recomputation, not the self-referenced pairs."""
+    hard = _blobs(seed=1, spread=1.5)   # overlapping clusters: minibatch
+    prod = EngineConfig(mode="minibatch", chunks=8, batch_chunks=2,
+                        patience=3, max_iters=60)
+    plan = TrainingPlan(algorithm="kmeans", k=3, config=prod, seed=0)
+    (r, h), = harvest_traces(plan, np.asarray(hard)[None])
+    # recompute by hand: same harvest run, explicit full-batch reference
+    cfg = harvest_config(prod, "kmeans", seed=plan.seed)
+    eng = ClusteringEngine("kmeans", cfg)
+    key = jax.random.PRNGKey(plan.seed)
+    c0 = eng.init(key, hard, 3)
+    ref = reference_partition(plan, hard, c0)
+    res = eng.fit(hard, c0)
+    r_ref, h_ref = engine_trace_to_rh(res.trace, hard, algorithm="kmeans",
+                                      k=3, ref_labels=ref)
+    np.testing.assert_allclose(r, r_ref, rtol=1e-6)
+    np.testing.assert_allclose(h, h_ref, rtol=1e-6)
+    r_self, _ = engine_trace_to_rh(res.trace, hard, algorithm="kmeans", k=3)
+    # self-reference was the bug: it pins the endpoint at r = 1 even though
+    # the subsample endpoint is NOT the full-batch partition
+    assert r_self[-1] == pytest.approx(1.0)
+    assert not np.allclose(r, r_self)
+
+
+def test_reference_config_resets_minibatch_regime():
+    prod = EngineConfig(mode="minibatch", chunks=8, batch_chunks=2,
+                        decay=0.9, ema=0.5, patience=4, max_iters=60,
+                        seed=9)
+    ref = reference_config(prod, "kmeans")
+    assert ref.mode == "full" and ref.batch_chunks == 0
+    assert ref.decay == 1.0 and ref.seed == 0 and ref.ema == 0.0
+    assert ref.stop_when_frozen and not ref.use_h_stop and not ref.trace
+    assert ref.chunks == prod.chunks    # memory layout is kept
 
 
 # --------------------------------------------------------------------------

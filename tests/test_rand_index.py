@@ -61,6 +61,61 @@ def test_paper_worked_example():
     assert r == pytest.approx(27.0 / 36.0)
 
 
+def test_exact_rand_at_2_20_points():
+    """Regression (ISSUE 6): at N = 2^20 the per-cell pair counts C(N_ij, 2)
+    exceed float32's exact-integer range (2^24), so the old float32 comb2
+    silently rounded.  The host path must produce the exactly-known answer
+    computed with arbitrary-precision integers."""
+    n, k = 1 << 20, 4
+    rng = np.random.default_rng(42)
+    a = rng.integers(0, k, n)
+    b = a.copy()
+    flip = rng.choice(n, n // 64, replace=False)
+    b[flip] = (b[flip] + 1 + rng.integers(0, k - 1, flip.size)) % k
+
+    # arbitrary-precision oracle from a numpy-built contingency table
+    table = np.zeros((k, k), np.int64)
+    np.add.at(table, (a, b), 1)
+
+    def c2(x):
+        return int(x) * (int(x) - 1) // 2
+
+    total = c2(n)
+    n11 = sum(c2(v) for v in table.ravel())
+    same_a = sum(c2(v) for v in table.sum(axis=1))
+    same_b = sum(c2(v) for v in table.sum(axis=0))
+    expected = (n11 + total - same_a - same_b + n11) / total
+
+    got = rand_index(jnp.asarray(a), jnp.asarray(b), k, k)
+    assert float(got) == expected                 # bit-exact, no approx
+
+    # the streamed path must agree with itself across chunk boundaries
+    from repro.core.rand_index import contingency_table_exact
+    t_stream = contingency_table_exact(a, b, k, k, chunk_rows=100_003)
+    np.testing.assert_array_equal(t_stream, table)
+
+
+def test_exact_path_handles_counts_beyond_float64_exact_range():
+    """Synthetic contingency table at beyond-paper scale: cell counts of
+    2^32 make C(n,2) ≈ 8.6e18 > 2^63 − 1 for the n·(n−1) intermediate —
+    only arbitrary-precision host math survives.  Rand of a diagonal table
+    plus an off-diagonal speck is exactly computable by hand."""
+    from repro.core.rand_index import rand_index_from_contingency
+    big = 1 << 32
+    table = np.array([[big, 1], [0, big]], dtype=np.int64)
+
+    def c2(x):
+        return x * (x - 1) // 2
+
+    n = 2 * big + 1
+    total = c2(n)
+    n11 = 2 * c2(big)
+    same_a = c2(big + 1) + c2(big)
+    same_b = c2(big) + c2(big + 1)
+    expected = (n11 + total - same_a - same_b + n11) / total
+    assert float(rand_index_from_contingency(table)) == expected
+
+
 def test_contingency_totals():
     a = np.array([0, 0, 1, 2, 1])
     b = np.array([1, 1, 0, 0, 1])

@@ -80,11 +80,35 @@ def test_forward_batch_sharded_matches_replicated(mesh8):
                                rtol=2e-2, atol=2e-3)
 
 
-def test_eos_stops_generation():
+def test_eos_stops_generation_and_is_stripped():
     srv = Server(PARAMS, CFG, n_slots=1, max_seq=64, eos_id=None)
     out = srv.generate([Request(prompt=[1, 2], max_new_tokens=4, rid=0)])
     eos = out[0][1]   # make the 2nd generated token the EOS
     srv2 = Server(PARAMS, CFG, n_slots=1, max_seq=64, eos_id=eos)
     out2 = srv2.generate([Request(prompt=[1, 2], max_new_tokens=4, rid=0)])
-    assert len(out2[0]) <= len(out[0])
-    assert out2[0][-1] == eos
+    # generation stops AT the first EOS and the EOS itself is not returned
+    cut = out[0].index(eos)
+    assert out2[0] == out[0][:cut]
+    assert eos not in out2[0]
+
+
+def test_single_token_request_returns_one_token():
+    """max_new_tokens=1 must yield exactly one token (the old loop decoded
+    once more before checking the length and returned two)."""
+    srv = Server(PARAMS, CFG, n_slots=1, max_seq=64)
+    out = srv.generate([Request(prompt=[1, 2, 3], max_new_tokens=1, rid=0)])
+    assert out[0] == _greedy_reference([1, 2, 3], 1)
+
+
+def test_admission_rejects_oversized_and_empty_prompts():
+    srv = Server(PARAMS, CFG, n_slots=1, max_seq=8)
+    with pytest.raises(ValueError, match="max_seq"):
+        srv.generate([Request(prompt=list(range(8)), rid=7)])
+    with pytest.raises(ValueError, match="empty prompt"):
+        srv.generate([Request(prompt=[], rid=8)])
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        srv.generate([Request(prompt=[1], max_new_tokens=0, rid=9)])
+    # a bad request anywhere in the batch rejects before any device work
+    with pytest.raises(ValueError, match="request 11"):
+        srv.generate([Request(prompt=[1, 2], rid=10),
+                      Request(prompt=list(range(99)), rid=11)])
