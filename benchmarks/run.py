@@ -508,6 +508,100 @@ def minibatch_shard():
     return rows
 
 
+@bench("sharded_overlap")
+def sharded_overlap():
+    """ISSUE 7: compressed, latency-hidden sharded sweeps — int8-EF ring
+    stats reduction vs fp32 psum, and the latency-hiding toggle (XLA flags
+    + double-buffered chunk prefetch) vs the synchronous baseline.
+
+    XLA reads ``XLA_FLAGS`` once per process, so each flag leg runs in a
+    fresh worker subprocess (``benchmarks.sharded_overlap_worker``) whose
+    environment ``repro.launch.mesh.overlap_env`` builds; the overlap leg
+    also turns on ``EngineConfig(prefetch=True)`` (bit-identical math).
+
+    Persists ``BENCH_sharded_overlap.json`` at the repo root (tracked
+    artifact).  Tracked claims (the CI ``longtail-artifacts`` gate):
+
+      · parity — int8-EF stop iterations match the fp32 psum stop to
+        ≤ 1 iteration at every device count, in both legs (the centred
+        compression basis + error feedback keep the Eq. 7 h trajectory on
+        the fp32 one);
+      · ≥ 3× collective-byte reduction vs fp32 at every multi-device
+        count (analytic ``stats_wire_bytes``; the ring factor cancels);
+      · overlap wall-clock per sweep no worse than the synchronous
+        baseline, summed over the sweep grid (1.15× tolerance — CPU
+        host-emulation timing noise, not a perf regression bar).
+    """
+    import subprocess
+    import sys
+    import tempfile
+    import jax
+    from repro.launch.mesh import overlap_env
+
+    if len(jax.devices()) < 8:
+        print("# sharded_overlap: needs 8 devices (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8); skipping — NOT "
+              "writing BENCH_sharded_overlap.json")
+        return []
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    legs = {}
+    for leg, enable in (("sync", False), ("overlap", True)):
+        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tf:
+            out = tf.name
+        cmd = [sys.executable, "-m", "benchmarks.sharded_overlap_worker",
+               "--out", out, "--leg", leg] + (["--prefetch"] if enable
+                                              else [])
+        subprocess.run(cmd, check=True, cwd=root,
+                       env=overlap_env(enable=enable))
+        with open(out) as f:
+            legs[leg] = json.load(f)
+        os.unlink(out)
+
+    rows = [r for leg in ("sync", "overlap") for r in legs[leg]["rows"]]
+    cell = {(r["leg"], r["devices"], r["compression"]): r for r in rows}
+    counts = sorted({r["devices"] for r in rows})
+    parity = {f"{leg}_d{m}": abs(cell[(leg, m, "int8_ef")]["iters"]
+                                 - cell[(leg, m, "none")]["iters"])
+              for leg in ("sync", "overlap") for m in counts}
+    byte_ratio = {f"d{m}": round(
+        cell[("sync", m, "none")]["wire_bytes_per_reduction"]
+        / cell[("sync", m, "int8_ef")]["wire_bytes_per_reduction"], 3)
+        for m in counts if m > 1}
+    wall = {leg: round(sum(r["wall_s"] for r in legs[leg]["rows"]), 3)
+            for leg in ("sync", "overlap")}
+    payload = {
+        "benchmark": "sharded_overlap",
+        **{k: legs["sync"][k] for k in ("n", "d", "k", "chunks",
+                                        "batch_chunks", "h_star",
+                                        "timed_iters")},
+        "overlap_leg": {"xla_flags": "latency_hiding_xla_flags",
+                        "prefetch": True},
+        "parity_iters_delta": parity,
+        "wire_byte_ratio_fp32_over_int8": byte_ratio,
+        "timed_wall_s_total": wall,
+        "claims": {
+            "int8_parity_delta_le_1": bool(max(parity.values()) <= 1),
+            "wire_byte_reduction_ge_3x":
+                bool(min(byte_ratio.values()) >= 3.0),
+            "overlap_wall_no_worse_1p15x":
+                bool(wall["overlap"] <= wall["sync"] * 1.15),
+        },
+        "note": "device counts are XLA host-platform emulation on CPU; "
+                "wall columns measure collective/partitioning overhead, "
+                "not accelerator scaling.  Parity and byte-ratio columns "
+                "are host-independent (the tracked claims); the wall "
+                "claim carries a 1.15x noise tolerance",
+        "rows": rows,
+    }
+    path = os.path.join(root, "BENCH_sharded_overlap.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return rows
+
+
 @bench("kernel_backends")
 def kernel_backends():
     """ISSUE 4: the kernel dispatch layer across engine modes and device

@@ -20,7 +20,8 @@ from .em_gmm import (GMMParams, em_step, em_fit_traced, em_fit_earlystop,
                      minibatch_mstep)
 from .engine import (ClusteringEngine, EngineConfig, EngineResult,
                      RestartResult, KMeansAlgorithm, EMAlgorithm,
-                     get_algorithm, ProvenanceMismatchError)
+                     get_algorithm, ProvenanceMismatchError,
+                     stats_wire_bytes)
 from .artifacts import ClusterArtifact, fingerprint_key, load_registry_dir
 from .sampling import GroupedData, random_groups, kfold_split, make_grouped
 from .cost_model import (CostReport, report, landuse_case_study,

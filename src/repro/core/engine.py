@@ -145,6 +145,22 @@ class KMeansAlgorithm:
     def moved(self, new_params, params):
         return jnp.any(new_params != params)
 
+    # centred compression basis (see _stats_reducer): transmit
+    # Σ(x − c_prev) per cluster instead of Σx.  The centred sums are
+    # count·(cluster mean − current centroid) — they shrink as the fit
+    # converges, and the int8 ring's pmax-shared scale shrinks with them,
+    # so quantisation error decays with the residual motion instead of
+    # staying pinned at ~1% of the raw moment magnitude.  The transform is
+    # linear per shard, so it commutes with the cross-shard sum and inverts
+    # exactly from the reduced (counts, centred sums).
+    def compress_basis(self, params, stats):
+        sums, counts, j = stats
+        return (sums - counts[:, None] * params, counts, j)
+
+    def decompress_basis(self, params, stats):
+        csums, counts, j = stats
+        return (csums + counts[:, None] * params, counts, j)
+
 
 class EMAlgorithm:
     """Diagonal-covariance GMM via EM.  Params: GMMParams.
@@ -204,6 +220,29 @@ class EMAlgorithm:
 
     def objective(self, stats):
         return stats[3]
+
+    # centred compression basis (see _stats_reducer and the k-means
+    # counterpart).  EM *requires* this: the M-step variance is
+    # r_x2/r_sum − mean², a catastrophic cancellation — with means ~9 and
+    # var ~1 the raw second moment is ~82 while the variance is 1, so a 1%
+    # int8 error on r_x2 is an ~80% error on var and EM diverges.  Centred
+    # moments Σr(x−μ) and Σr(x−μ)² are the same magnitude as the answers
+    # they produce, so quantisation error stays proportional.  Both
+    # transforms are linear in (r_sum, r_x, r_x2) per shard, commute with
+    # the cross-shard sum, and invert exactly from the reduced tree.
+    def compress_basis(self, params, stats):
+        r_sum, r_x, r_x2, ll = stats
+        a = params.means
+        r_xc = r_x - r_sum[:, None] * a
+        r_x2c = r_x2 - 2.0 * a * r_x + (a * a) * r_sum[:, None]
+        return (r_sum, r_xc, r_x2c, ll)
+
+    def decompress_basis(self, params, stats):
+        r_sum, r_xc, r_x2c, ll = stats
+        a = params.means
+        r_x = r_xc + r_sum[:, None] * a
+        r_x2 = r_x2c + 2.0 * a * r_x - (a * a) * r_sum[:, None]
+        return (r_sum, r_x, r_x2, ll)
 
     def moved(self, new_params, params):
         # EM has no frozen-partition fixed point at fp granularity; the
@@ -266,6 +305,29 @@ class EngineConfig:
     host-side (see ``repro.core.longtail_train``).  The buffers are
     [max_iters]-shaped (params: [max_iters, ...]); sizes are a few KB for
     clustering workloads.
+
+    ``stats_compression="int8_ef"`` routes every per-sweep stats reduction
+    in the sharded drivers through the int8 ring all-reduce with error
+    feedback (``repro.distribution.compression``) instead of fp32 psum:
+    array-valued sufficient statistics (centroid sums, counts, GMM
+    moments) move over the wire as int8 chunks (~4× fewer collective
+    bytes), the quantisation residual is carried in the fit loop's
+    ``while_loop`` state (per restart under vmap), and the scalar
+    objective leaves (J / loglik) stay exact fp32 psum — int8's ~8e-3
+    relative resolution would destroy the Eq. 7 stop they drive.
+    ``stats_axis_size`` is the ring's static size; the sharded drivers
+    resolve it from the mesh, so normal use is just
+    ``EngineConfig(stats_compression="int8_ef")`` + ``fit_sharded``.  The
+    final labels/objective pass always reduces exact, so the result
+    contract is unchanged; only the trajectory sees quantisation (parity
+    on stop iterations is gated in ``BENCH_sharded_overlap.json``).
+
+    ``prefetch=True`` double-buffers the streaming chunk scan: the scan
+    carry holds the chunk being processed while the body issues the
+    dynamic-slice load of chunk i+1, so the next chunk's copy has no data
+    dependency on the current chunk's matmul and the scheduler can overlap
+    them.  Chunk order and accumulation math are unchanged — results are
+    bit-identical to the synchronous scan.
     """
     max_iters: int = 300
     h_star: float = 0.0
@@ -282,6 +344,9 @@ class EngineConfig:
     ema: float = 0.0                # minibatch h smoothing (0 = raw)
     kernel_backend: str | None = None   # registry backend; None = auto
     trace: bool = False             # record a per-iteration Trace
+    stats_compression: str = "none"     # "none" | "int8_ef" sweep reductions
+    stats_axis_size: int = 0        # ring size; sharded drivers resolve it
+    prefetch: bool = False          # double-buffer the streaming chunk scan
 
     def __post_init__(self):
         # CI hook: REPRO_FORCE_KERNEL_BACKEND=<backend> reroutes every
@@ -337,6 +402,40 @@ class EngineConfig:
                     f"batch_chunks={self.batch_chunks}, chunks={self.chunks}")
             if not 0.0 < self.decay <= 1.0:
                 raise ValueError(f"decay must be in (0, 1]; got {self.decay}")
+        if self.stats_compression not in ("none", "int8_ef"):
+            raise ValueError(
+                f"unknown stats_compression {self.stats_compression!r}; "
+                "choose 'none' (fp32 psum) or 'int8_ef' (int8 ring "
+                "all-reduce with error feedback)")
+        if self.stats_axis_size < 0:
+            raise ValueError(
+                f"stats_axis_size must be >= 0; got {self.stats_axis_size}")
+        if self.stats_compression == "none" and self.stats_axis_size:
+            raise ValueError(
+                f"stats_axis_size={self.stats_axis_size} has no effect with "
+                "stats_compression='none' — pass "
+                "stats_compression='int8_ef' or drop it")
+        if self.stats_compression != "none":
+            if self.stop_when_frozen:
+                raise ValueError(
+                    "stop_when_frozen requires bit-exact parameter fixed "
+                    "points, which int8-quantised stats never reach (the "
+                    "centroids keep jittering at quantisation granularity "
+                    "and the fit only ends at max_iters) — use the Eq. 7 "
+                    "h stop with stats_compression='int8_ef'")
+            if isinstance(self.axis_name, tuple):
+                raise ValueError(
+                    "stats_compression rides a single-axis ppermute ring; "
+                    f"axis_name={self.axis_name!r} names "
+                    f"{len(self.axis_name)} mesh axes — collapse the data "
+                    "axes into one or use stats_compression='none'")
+            if self.axis_name is not None and self.stats_axis_size < 1:
+                raise ValueError(
+                    "stats_compression='int8_ef' with an explicit "
+                    f"axis_name={self.axis_name!r} needs stats_axis_size "
+                    "(the ring's static size); the sharded drivers "
+                    "(fit_sharded / fit_restarts_sharded) resolve it from "
+                    "the mesh automatically")
 
     # engine-regime fields a fitted LongTailModel's provenance is compared
     # against in from_longtail (chunks only matters when minibatch draws
@@ -451,38 +550,166 @@ def _chunk_stats_fn(alg, config: EngineConfig):
     return alg.chunk_stats
 
 
+def _stats_compressed(config: EngineConfig) -> bool:
+    """True when this config actually runs the int8 ring (compression on,
+    sharded, more than one shard — a 1-device ring is the identity)."""
+    return (config.stats_compression == "int8_ef"
+            and config.axis_name is not None
+            and config.stats_axis_size > 1)
+
+
+def _stats_reducer(alg, config: EngineConfig):
+    """The per-sweep stats reduction → ``(init_ef, reduce_stats)``.
+
+    ``reduce_stats(stats, ef, params) -> (reduced_stats, new_ef)`` replaces
+    the inline psum in the fit-loop bodies.  Uncompressed (or unsharded, or
+    single-shard) configs psum exactly and carry an empty ``ef = ()``.
+
+    With ``stats_compression="int8_ef"`` the stats are first rotated into
+    the algorithm's *centred* compression basis (``alg.compress_basis`` —
+    moments taken around the current parameters, so the transmitted values
+    shrink as the fit converges and the pmax-shared int8 scale shrinks with
+    them; for EM this is what makes compression viable at all, see
+    ``EMAlgorithm.compress_basis``).  Array-valued leaves (ndim >= 1) then
+    go through ``compress_with_feedback`` + ``ring_allreduce_int8`` (sum
+    mode, int8 on the wire, Karimireddy-style residual carried to the next
+    iteration) while the scalar leaves (J / loglik) stay exact fp32 psum —
+    they drive the Eq. 7 stop, where int8's ~8e-3 relative resolution is
+    orders of magnitude above production h* thresholds.  The reduced tree
+    is rotated back via ``alg.decompress_basis`` (an exact linear
+    inversion using the reduced tree itself).
+
+    The ring's output is bit-identical on every shard and ``params`` is
+    replicated, so replicated stop decisions stay in lock-step (diverging
+    trip counts under shard_map would deadlock the collective).
+    """
+    if not _stats_compressed(config):
+        if config.axis_name is None:
+            return (lambda stats_like: ()), (
+                lambda stats, ef, params: (stats, ef))
+
+        def reduce_psum(stats, ef, params):
+            return jax.tree.map(
+                lambda a: jax.lax.psum(a, config.axis_name), stats), ef
+
+        return (lambda stats_like: ()), reduce_psum
+
+    from repro.distribution.compression import (compress_with_feedback,
+                                                ring_allreduce_int8,
+                                                shared_scale)
+    axis, size = config.axis_name, config.stats_axis_size
+
+    def init_ef(stats_like):
+        """Zero residual buffers for the compressed (ndim >= 1) leaves."""
+        return tuple(jnp.zeros(jnp.shape(a), jnp.float32)
+                     for a in jax.tree.leaves(stats_like)
+                     if jnp.ndim(a) >= 1)
+
+    def reduce_stats(stats, ef, params):
+        stats = alg.compress_basis(params, stats)
+        flat, tree = jax.tree.flatten(stats)
+        out, new_ef, i = [], [], 0
+        for a in flat:
+            if jnp.ndim(a) == 0:
+                out.append(jax.lax.psum(a, axis))
+                continue
+            reduced, e = compress_with_feedback(
+                a, ef[i],
+                lambda g: ring_allreduce_int8(g, axis, size, mean=False),
+                scale_fn=lambda g: shared_scale(g, axis, size))
+            out.append(reduced)
+            new_ef.append(e)
+            i += 1
+        reduced_stats = jax.tree.unflatten(tree, out)
+        return alg.decompress_basis(params, reduced_stats), tuple(new_ef)
+
+    return init_ef, reduce_stats
+
+
+def stats_wire_bytes(stats_like, axis_size: int,
+                     compression: str = "none") -> int:
+    """Analytic bytes-on-wire each device sends for ONE stats reduction.
+
+    Mirrors ``_stats_reducer``'s leaf policy: under ``int8_ef`` every
+    ndim >= 1 leaf moves 1 byte/element over the ring plus one f32 scalar
+    pmax for its shared scale; scalar leaves (and every leaf under
+    ``none``) move 4 bytes/element.  Both paths carry the same ring factor
+    2·(N−1)/N, so it cancels in int8-vs-fp32 ratios but keeps the absolute
+    numbers meaningful to a cost model.  ``stats_like`` may be concrete or
+    abstract (``jax.eval_shape``) — only shapes are read.
+    """
+    from repro.distribution.compression import ring_wire_bytes
+    total = 0
+    for a in jax.tree.leaves(stats_like):
+        shape = jnp.shape(a)
+        n = 1
+        for s in shape:
+            n *= int(s)
+        if compression == "int8_ef" and len(shape) >= 1:
+            total += ring_wire_bytes(n, axis_size)       # int8 payload
+            total += ring_wire_bytes(4, axis_size)       # f32 scale pmax
+        else:
+            total += ring_wire_bytes(4 * n, axis_size)   # fp32 psum
+    return total
+
+
 def _sweep_chunked(alg, config: EngineConfig, xc, mask, params,
-                   with_labels: bool):
+                   with_labels: bool, reduce: bool = True):
     """One full pass over a pre-chunked [C, P, D] layout (+ [C, P] mask)
     → (labels [C, P] | None, sufficient stats), stats psum'd over
-    ``axis_name``.  This is the layout the sharded drivers hand each shard
-    (its row-slice of every global chunk); labels stay in chunk layout so
-    callers can shard/flatten/strip-padding as they need.  With
-    ``use_kernel`` each chunk runs through the dispatched kernel op (the
-    mask operand carries the padding), so the sharded drivers serve both
-    paths."""
-    chunk_stats = _chunk_stats_fn(alg, config)
+    ``axis_name`` (``reduce=False`` leaves them shard-local for a caller-
+    side reducer — the compressed-stats fit loops).  This is the layout
+    the sharded drivers hand each shard (its row-slice of every global
+    chunk); labels stay in chunk layout so callers can
+    shard/flatten/strip-padding as they need.  With ``use_kernel`` each
+    chunk runs through the dispatched kernel op (the mask operand carries
+    the padding), so the sharded drivers serve both paths.
 
-    def body(acc, inp):
-        xi, mi = inp
+    ``config.prefetch`` double-buffers the scan: the carry holds the chunk
+    being processed and the body issues the load of chunk i+1, which has no
+    data dependency on the current chunk's compute — same chunk order, same
+    accumulation, bit-identical stats/labels."""
+    chunk_stats = _chunk_stats_fn(alg, config)
+    zero = alg.zero_stats(params)
+
+    def compute(acc, xi, mi):
         lab, st = chunk_stats(xi, mi, params)
         acc = jax.tree.map(jnp.add, acc, st)
         return acc, (lab if with_labels else jnp.zeros((), jnp.int32))
 
-    stats, labs = jax.lax.scan(body, alg.zero_stats(params), (xc, mask))
-    if config.axis_name is not None:
+    c = xc.shape[0]
+    if config.prefetch and c > 1:
+        def body(carry, i):
+            acc, x_cur, m_cur = carry
+            nxt = jnp.minimum(i + 1, c - 1)
+            x_nxt = jax.lax.dynamic_index_in_dim(xc, nxt, keepdims=False)
+            m_nxt = jax.lax.dynamic_index_in_dim(mask, nxt, keepdims=False)
+            acc, lab = compute(acc, x_cur, m_cur)
+            return (acc, x_nxt, m_nxt), lab
+
+        (stats, _, _), labs = jax.lax.scan(
+            body, (zero, xc[0], mask[0]), jnp.arange(c))
+    else:
+        def body(acc, inp):
+            xi, mi = inp
+            return compute(acc, xi, mi)
+
+        stats, labs = jax.lax.scan(body, zero, (xc, mask))
+    if reduce and config.axis_name is not None:
         stats = jax.tree.map(
             lambda a: jax.lax.psum(a, config.axis_name), stats)
     return (labs if with_labels else None), stats
 
 
-def _sweep(alg, config: EngineConfig, x, params, with_labels: bool):
+def _sweep(alg, config: EngineConfig, x, params, with_labels: bool,
+           reduce: bool = True):
     """One full pass over the points → (labels | None, sufficient stats).
 
     chunks=1 runs the monolithic fused pass; chunks>1 streams via lax.scan
     (pure-JAX path) or via the dispatched ops' chunked entry points (fused
     path, static slices; ``config.kernel_backend`` pins a registry
-    backend).  Stats are psum'd over ``axis_name`` once per sweep.
+    backend).  Stats are psum'd over ``axis_name`` once per sweep
+    (``reduce=False`` defers to a caller-side reducer).
     """
     if config.use_kernel:
         labels, stats = alg.kernel_stats(x, params, config.chunks,
@@ -497,11 +724,11 @@ def _sweep(alg, config: EngineConfig, x, params, with_labels: bool):
     else:
         xc, mask = _chunk_points(x, config.chunks)
         labels, stats = _sweep_chunked(alg, config, xc, mask, params,
-                                       with_labels)
+                                       with_labels, reduce=reduce)
         if with_labels:
             labels = labels.reshape(-1)[: x.shape[0]]
         return labels, stats
-    if config.axis_name is not None:
+    if reduce and config.axis_name is not None:
         stats = jax.tree.map(
             lambda a: jax.lax.psum(a, config.axis_name), stats)
     return labels, stats
@@ -529,10 +756,14 @@ def _minibatch_draw(config: EngineConfig, mask, key):
                              shape=(config.batch_chunks,), replace=False)
 
 
-def _minibatch_stats(alg, config: EngineConfig, xc, mask, idx, params):
+def _minibatch_stats(alg, config: EngineConfig, xc, mask, idx, params,
+                     reduce: bool = True):
     """Masked stats over the drawn chunks → (stats, n_batch) — the same
     accumulation as the full sweep, over N·B/C points only, via the shared
-    gather-free subsample driver (``kernels.layout.subsampled_stats``)."""
+    gather-free subsample driver (``kernels.layout.subsampled_stats``).
+    ``reduce=False`` leaves the stats shard-local for a caller-side
+    reducer; n_batch (a scalar the update and stop divide by) is always
+    psum'd exact."""
     from repro.kernels.layout import subsampled_stats
     chunk_stats = _chunk_stats_fn(alg, config)
 
@@ -541,10 +772,12 @@ def _minibatch_stats(alg, config: EngineConfig, xc, mask, idx, params):
         return st
 
     stats, n_batch = subsampled_stats(call, alg.zero_stats(params),
-                                      xc, mask, idx)
+                                      xc, mask, idx,
+                                      prefetch=config.prefetch)
     if config.axis_name is not None:
-        stats = jax.tree.map(
-            lambda a: jax.lax.psum(a, config.axis_name), stats)
+        if reduce:
+            stats = jax.tree.map(
+                lambda a: jax.lax.psum(a, config.axis_name), stats)
         n_batch = jax.lax.psum(n_batch, config.axis_name)
     return stats, n_batch
 
@@ -576,6 +809,7 @@ class _State(NamedTuple):
     key: jnp.ndarray            # minibatch chunk-sampling stream
     carry: Any                  # minibatch step-size state (v counts)
     trace: Any                  # Trace buffers when config.trace, else ()
+    ef: Any = ()                # int8_ef quantisation residuals, else ()
 
 
 def _zero_trace(config: EngineConfig, params0):
@@ -610,6 +844,7 @@ def _fit_loop(alg, config: EngineConfig, params0, h_star, n_total, sweep,
     minibatch draws sample from (None in full mode)."""
     minibatch = config.mode == "minibatch"
     xc, mask = mb_data if minibatch else (None, None)
+    init_ef, reduce_stats = _stats_reducer(alg, config)
     init = _State(
         params=params0,
         j_curr=jnp.asarray(jnp.inf, jnp.float32),
@@ -620,6 +855,7 @@ def _fit_loop(alg, config: EngineConfig, params0, h_star, n_total, sweep,
         key=jax.random.PRNGKey(config.seed),
         carry=alg.zero_carry(params0) if minibatch else (),
         trace=_zero_trace(config, params0) if config.trace else (),
+        ef=init_ef(alg.zero_stats(params0)),
     )
 
     def cond(s: _State):
@@ -630,7 +866,8 @@ def _fit_loop(alg, config: EngineConfig, params0, h_star, n_total, sweep,
             key, sub = jax.random.split(s.key)
             idx = _minibatch_draw(config, mask, sub)
             stats, n_batch = _minibatch_stats(alg, config, xc, mask, idx,
-                                              s.params)
+                                              s.params, reduce=False)
+            stats, ef = reduce_stats(stats, s.ef, s.params)
             j_old = alg.objective(stats) / jnp.maximum(n_batch, 1.0)
             new_params, carry = alg.minibatch_update(
                 s.params, stats, s.carry, n_batch, config.decay)
@@ -642,7 +879,8 @@ def _fit_loop(alg, config: EngineConfig, params0, h_star, n_total, sweep,
             # pass; don't pay it for a value nothing reads).
             if config.use_h_stop:
                 stats2, _ = _minibatch_stats(alg, config, xc, mask, idx,
-                                             new_params)
+                                             new_params, reduce=False)
+                stats2, ef = reduce_stats(stats2, ef, s.params)
                 j = alg.objective(stats2) / jnp.maximum(n_batch, 1.0)
                 h = jnp.abs(j - j_old) / jnp.maximum(jnp.abs(j_old), _EPS)
                 h = jnp.where(jnp.isfinite(s.h),
@@ -650,7 +888,8 @@ def _fit_loop(alg, config: EngineConfig, params0, h_star, n_total, sweep,
             else:
                 j, h = j_old, s.h
         else:
-            _, stats = sweep(s.params, False)
+            _, stats = sweep(s.params, False, reduce=False)
+            stats, ef = reduce_stats(stats, s.ef, s.params)
             j = alg.objective(stats)
             new_params = alg.update(s.params, stats, n_total)
             key, carry = s.key, s.carry
@@ -681,11 +920,12 @@ def _fit_loop(alg, config: EngineConfig, params0, h_star, n_total, sweep,
         else:
             tr = s.trace
         return _State(new_params, j, h, hits, s.iteration + 1, moved,
-                      key, carry, tr)
+                      key, carry, tr, ef)
 
     final = jax.lax.while_loop(cond, body, init)
-    # the labels pass is always a full sweep — minibatch only changes how
-    # the parameters got there, not the result contract
+    # the labels pass is always a full sweep with the exact fp32 psum —
+    # minibatch/compression only change how the parameters got there, not
+    # the result contract
     labels, stats = sweep(final.params, True)
     return EngineResult(final.params, labels, alg.objective(stats),
                         final.iteration, final.h,
@@ -700,8 +940,9 @@ def _fit(x, params0, h_star, alg, config: EngineConfig):
     mb = (_chunk_points(x, config.chunks)
           if config.mode == "minibatch" else None)
 
-    def sweep(params, with_labels):
-        return _sweep(alg, config, x, params, with_labels=with_labels)
+    def sweep(params, with_labels, reduce=True):
+        return _sweep(alg, config, x, params, with_labels=with_labels,
+                      reduce=reduce)
 
     return _fit_loop(alg, config, params0, h_star, n_total, sweep, mb)
 
@@ -723,9 +964,9 @@ def _fit_chunked(xc, mask, params0, h_star, alg, config: EngineConfig):
     params0 = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0)
     mb = (xc, mask) if config.mode == "minibatch" else None
 
-    def sweep(params, with_labels):
+    def sweep(params, with_labels, reduce=True):
         return _sweep_chunked(alg, config, xc, mask, params,
-                              with_labels=with_labels)
+                              with_labels=with_labels, reduce=reduce)
 
     return _fit_loop(alg, config, params0, h_star, n_total, sweep, mb)
 
@@ -755,6 +996,7 @@ class _BatchState(NamedTuple):
     keys: jnp.ndarray           # [R, 2] per-restart minibatch streams
     carry: Any                  # [R, ...] minibatch step-size state
     trace: Any                  # [R, T] Trace buffers when config.trace
+    ef: Any = ()                # [R, ...] int8_ef residuals, else ()
 
 
 def _zero_trace_restarts(config: EngineConfig, params0, r: int):
@@ -788,12 +1030,17 @@ def _restart_loop(alg, config: EngineConfig, params0, h_star, n_total,
     iteration and on the final argbest."""
     r = jax.tree.leaves(params0)[0].shape[0]
     minibatch = config.mode == "minibatch"
+    init_ef, reduce_stats = _stats_reducer(alg, config)
+    # vmap over the restart axis: the ring/psum inside batches per restart
+    # (vmap-of-collective), each restart carrying its own residual buffers
+    reduce_v = jax.vmap(reduce_stats)
     if minibatch:
         xc, mask = mb_data
         mb_draw_v = jax.vmap(
             lambda kk: _minibatch_draw(config, mask, kk))
         mb_stats_v = jax.vmap(
-            lambda idx, p: _minibatch_stats(alg, config, xc, mask, idx, p))
+            lambda idx, p: _minibatch_stats(alg, config, xc, mask, idx, p,
+                                            reduce=False))
         mb_update_v = jax.vmap(
             lambda p, st, cv, nb: alg.minibatch_update(p, st, cv, nb,
                                                        config.decay))
@@ -813,6 +1060,7 @@ def _restart_loop(alg, config: EngineConfig, params0, h_star, n_total,
         carry=(jax.vmap(alg.zero_carry)(params0) if minibatch else ()),
         trace=(_zero_trace_restarts(config, params0, r)
                if config.trace else ()),
+        ef=jax.vmap(lambda p: init_ef(alg.zero_stats(p)))(params0),
     )
 
     def cond(s: _BatchState):
@@ -826,12 +1074,14 @@ def _restart_loop(alg, config: EngineConfig, params0, h_star, n_total,
             keys, subs = split[:, 0], split[:, 1]
             idx = mb_draw_v(subs)                           # [R, B] indices
             stats, n_batch = mb_stats_v(idx, s.params)
+            stats, ef = reduce_v(stats, s.ef, s.params)
             j_old = objective_v(stats) / jnp.maximum(n_batch, 1.0)
             new_params, carry = mb_update_v(s.params, stats, s.carry,
                                             n_batch)
             # paired h on the same per-restart subsample (see _fit)
             if config.use_h_stop:
                 stats2, _ = mb_stats_v(idx, new_params)
+                stats2, ef = reduce_v(stats2, ef, s.params)
                 j = objective_v(stats2) / jnp.maximum(n_batch, 1.0)
                 h = (jnp.abs(j - j_old)
                      / jnp.maximum(jnp.abs(j_old), _EPS)).astype(jnp.float32)
@@ -840,7 +1090,7 @@ def _restart_loop(alg, config: EngineConfig, params0, h_star, n_total,
             else:
                 j, h = j_old, s.h
         else:
-            stats = sweep_stats(s.params)
+            stats, ef = reduce_v(sweep_stats(s.params), s.ef, s.params)
             j = objective_v(stats)
             new_params = update_v(s.params, stats, n_total)
             keys, carry = s.keys, s.carry
@@ -860,6 +1110,9 @@ def _restart_loop(alg, config: EngineConfig, params0, h_star, n_total,
         active = jnp.logical_and(
             a, _live(config, n_iters, hits_out, moved_out))
         carry_out = _mask_tree(a, carry, s.carry) if minibatch else carry
+        # stopped restarts keep their frozen residuals (nothing reads them
+        # again, but the masked no-op body must stay a fixed point)
+        ef_out = _mask_tree(a, ef, s.ef) if jax.tree.leaves(s.ef) else s.ef
         if config.trace:
             # per-restart scatter at each restart's own iteration counter;
             # stopped restarts are masked back (a write landing at a
@@ -882,7 +1135,7 @@ def _restart_loop(alg, config: EngineConfig, params0, h_star, n_total,
         else:
             tr = s.trace
         return _BatchState(params, j_curr, h_out, hits_out, n_iters,
-                           moved_out, active, keys, carry_out, tr)
+                           moved_out, active, keys, carry_out, tr, ef_out)
 
     final = jax.lax.while_loop(cond, body, init)
     labels, stats = sweep_labels(final.params)
@@ -907,7 +1160,8 @@ def _fit_restarts(x, params0, h_star, alg, config: EngineConfig):
     n_total = _global_n(x, config)
     params0 = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0)
     sweep_stats = jax.vmap(
-        lambda p: _sweep(alg, config, x, p, with_labels=False)[1])
+        lambda p: _sweep(alg, config, x, p, with_labels=False,
+                         reduce=False)[1])
     sweep_labels = jax.vmap(
         lambda p: _sweep(alg, config, x, p, with_labels=True))
     mb = (_chunk_points(x, config.chunks)
@@ -931,7 +1185,7 @@ def _fit_restarts_chunked(xc, mask, params0, h_star, alg,
     params0 = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), params0)
     sweep_stats = jax.vmap(
         lambda p: _sweep_chunked(alg, config, xc, mask, p,
-                                 with_labels=False)[1])
+                                 with_labels=False, reduce=False)[1])
     sweep_labels = jax.vmap(
         lambda p: _sweep_chunked(alg, config, xc, mask, p,
                                  with_labels=True))
@@ -1019,7 +1273,20 @@ class ClusteringEngine:
                 "one 'data' or 'pod'); the sharded drivers shard the "
                 "points over the data axes")
         axis = dp if len(dp) > 1 else dp[0]
-        cfg = dataclasses.replace(self.config, axis_name=axis)
+        if self.config.stats_compression != "none":
+            if len(dp) > 1:
+                raise ValueError(
+                    "stats_compression rides a single-axis ppermute ring "
+                    f"but mesh {mesh.axis_names} has data axes {dp}; "
+                    "collapse them into one axis (or use "
+                    "stats_compression='none')")
+            # the ring needs its static size; a 1-device mesh degrades to
+            # the exact path inside _stats_reducer
+            cfg = dataclasses.replace(
+                self.config, axis_name=axis,
+                stats_axis_size=int(mesh.shape[dp[0]]))
+        else:
+            cfg = dataclasses.replace(self.config, axis_name=axis)
         xc, mask = _chunk_points(jnp.asarray(x, jnp.float32), cfg.chunks)
         xc, mask = shard_chunked_points(xc, mask, mesh)
         xc_spec = chunked_points_spec(mesh)

@@ -13,7 +13,9 @@ the per-leaf quantisation residual into the next step (Karimireddy et al.
 2019 — keeps SGD convergence despite biased rounding).
 
 Used under ``shard_map`` on the DP axes; validated numerically in
-tests/test_compression.py (subprocess with 8 host devices).
+tests/test_distribution.py (ring semantics on the 8-host-device ``mesh8``
+substrate) and tests/test_engine_sharded.py (stop-iteration parity of the
+``EngineConfig(stats_compression="int8_ef")`` fit path against fp32 psum).
 """
 from __future__ import annotations
 
@@ -41,13 +43,21 @@ def shared_scale(x, axis_name, axis_size: int = 1):
     return jnp.maximum(amax * axis_size, 1e-12) / 127.0
 
 
-def ring_allreduce_int8(x, axis_name: str, axis_size: int):
-    """All-reduce ``x`` (f32) with int8 wire traffic. Mean-reduced output.
+def ring_allreduce_int8(x, axis_name: str, axis_size: int, *,
+                        mean: bool = True):
+    """All-reduce ``x`` (f32) with int8 wire traffic.
 
     x is padded to a multiple of axis_size and chunked; each step sends one
     int8 chunk to the next rank (ppermute ring). Local accumulation is f32
     (re-quantised before each hop — the re-quantisation error is what the
-    error-feedback buffer absorbs).
+    error-feedback buffer absorbs).  ``mean=False`` returns the SUM, matching
+    ``psum`` semantics for sufficient statistics.
+
+    The output is bit-identical on every shard: each rank's own chunk goes
+    through the same quantise→dequantise round trip as the copies it ships
+    to its peers.  Replicated callers (e.g. a ``while_loop`` stop decision
+    under ``shard_map``) depend on this — shards disagreeing in the last
+    int8 ulp would take different trip counts and deadlock the collective.
     """
     if axis_size == 1:
         return x
@@ -60,56 +70,66 @@ def ring_allreduce_int8(x, axis_name: str, axis_size: int):
     idx = jax.lax.axis_index(axis_name)
     perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
 
-    # --- reduce-scatter: after N−1 steps, rank r owns the full sum of chunk r+1
+    # --- reduce-scatter: after N−1 steps, rank r owns the full sum of chunk
+    # r+1.  Each hop permutes ONE int8 [C] chunk (the partial sum computed
+    # last step), not the whole buffer — wire traffic is 2·(N−1)/N × payload.
     acc = chunks                                            # f32 accum
-    send = quantize_int8(chunks, scale)                     # int8 on the wire
 
-    def rs_step(i, carry):
-        acc, send = carry
+    def rs_step(i, acc):
+        s = (idx - i) % axis_size               # chunk we finished last step
+        send = quantize_int8(acc[s], scale)     # int8 [C] on the wire
         recv = jax.lax.ppermute(send, axis_name, perm)
-        # chunk index being accumulated this step at this rank:
-        k = (idx - i - 1) % axis_size
-        upd = acc[k] + dequantize_int8(recv[k], scale)
-        acc = acc.at[k].set(upd)
-        send = send.at[k].set(quantize_int8(upd, scale))
-        return acc, send
+        k = (idx - i - 1) % axis_size           # chunk we accumulate now
+        return acc.at[k].add(dequantize_int8(recv, scale))
 
-    acc, send = jax.lax.fori_loop(0, axis_size - 1, rs_step, (acc, send))
+    acc = jax.lax.fori_loop(0, axis_size - 1, rs_step, acc)
 
-    # --- all-gather: circulate the owned (fully-reduced) chunks
+    # --- all-gather: circulate the owned (fully-reduced) chunk.  The owner
+    # quantises once; the int8 payload is forwarded unchanged, and the owner
+    # keeps the same quantise→dequantise round trip its peers see, so the
+    # gathered result is bit-identical on every shard.
     own = (idx + 1) % axis_size
+    own_q = quantize_int8(acc[own], scale)      # int8 [C]
     out = jnp.zeros_like(chunks)
-    out = out.at[own].set(acc[own])
-    send_q = quantize_int8(acc, scale)
+    out = out.at[own].set(dequantize_int8(own_q, scale))
 
     def ag_step(i, carry):
-        out, send_q = carry
-        recv = jax.lax.ppermute(send_q, axis_name, perm)
+        out, send = carry
+        recv = jax.lax.ppermute(send, axis_name, perm)
         k = (idx - i) % axis_size
-        out = out.at[k].set(dequantize_int8(recv[k], scale))
-        send_q = send_q.at[k].set(recv[k])
-        return out, send_q
+        out = out.at[k].set(dequantize_int8(recv, scale))
+        return out, recv
 
-    out, _ = jax.lax.fori_loop(0, axis_size - 1, ag_step, (out, send_q))
+    out, _ = jax.lax.fori_loop(0, axis_size - 1, ag_step, (out, own_q))
     total = out.reshape(-1)[:n].reshape(orig_shape)
-    return total / axis_size
+    return total / axis_size if mean else total
 
 
 def init_error_feedback(params):
     return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
 
 
-def compress_with_feedback(grads, ef_state, reduce_fn):
+def compress_with_feedback(grads, ef_state, reduce_fn, scale_fn=None):
     """g' = reduce(g + e);  e ← (g + e) − dequant-path(g + e).
 
     ``reduce_fn(leaf)`` performs the lossy reduction (e.g. ring int8).  The
-    residual uses the local quantisation error (the standard EF-SGD form).
+    residual uses the quantisation error of OUR contribution (the standard
+    EF-SGD form).  ``scale_fn(leaf)`` must return the scale the reduce path
+    quantises with — when ``reduce_fn`` is ``ring_allreduce_int8`` that is
+    ``shared_scale`` (pmax × axis_size), NOT the local ``max(|leaf|)/127``:
+    with the wrong scale the residual models rounding that never happened
+    and the EF buffer absorbs the wrong error.  Defaults to the local scale
+    for the single-device ``fake_quantize_grads`` path, where the two
+    coincide.
     """
+    if scale_fn is None:
+        scale_fn = lambda g: jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+
     def one(g, e):
         corrected = g.astype(jnp.float32) + e
         reduced = reduce_fn(corrected)
-        # local residual: what int8 rounding destroyed of OUR contribution
-        scale = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12) / 127.0
+        # residual: what the wire's quantisation destroyed of OUR contribution
+        scale = scale_fn(corrected)
         local_q = dequantize_int8(quantize_int8(corrected, scale), scale)
         new_e = corrected - local_q
         return reduced, new_e
@@ -120,6 +140,17 @@ def compress_with_feedback(grads, ef_state, reduce_fn):
     new_g = jax.tree.unflatten(tree, [o[0] for o in out])
     new_e = jax.tree.unflatten(tree, [o[1] for o in out])
     return new_g, new_e
+
+
+def ring_wire_bytes(payload_bytes: int, axis_size: int) -> int:
+    """Bytes each device SENDS for one ring all-reduce of a payload of
+    ``payload_bytes``: N−1 reduce-scatter hops + N−1 all-gather hops, one
+    1/N-sized chunk per hop → 2·(N−1)/N × payload.  The same factor applies
+    to an fp32 ring, so it cancels in int8-vs-fp32 byte ratios — but the
+    absolute numbers are what a cost model consumes."""
+    if axis_size <= 1:
+        return 0
+    return int(2 * (axis_size - 1) * payload_bytes) // int(axis_size)
 
 
 def fake_quantize_grads(grads):

@@ -174,7 +174,7 @@ def chunked_sweep(call, n: int, chunks: int):
     return (jnp.concatenate(rows, axis=-1), *adds)
 
 
-def subsampled_stats(call, zero, xc, mask, idx):
+def subsampled_stats(call, zero, xc, mask, idx, prefetch: bool = False):
     """Gather-free stats over drawn chunks of a ``chunk_points`` layout.
 
     ``call(x_chunk [P, D], w [P])`` returns a pytree of additive statistics
@@ -186,14 +186,40 @@ def subsampled_stats(call, zero, xc, mask, idx):
     drawn rows.  Composes with ``vmap``: per-restart draws batch the
     indexed chunk, which the ops' batching rules route onto the kernels'
     restart grid axis.
+
+    ``prefetch=True`` double-buffers the scan: the carry holds the chunk
+    being processed while the body issues the load of the *next* drawn
+    chunk, which has no data dependency on the current ``call`` — the
+    scheduler can overlap copy i+1 with compute i.  Same chunk order, same
+    adds: results are bit-identical.
     """
-    def body(carry, i):
-        acc, nb = carry
+    def load(i):
         xi = jax.lax.dynamic_index_in_dim(xc, i, 0, keepdims=False)
         mi = jax.lax.dynamic_index_in_dim(mask, i, 0, keepdims=False)
-        st = call(xi, mi)
-        return (jax.tree.map(jnp.add, acc, st), nb + jnp.sum(mi)), None
+        return xi, mi
 
     init = (zero, jnp.zeros((), jnp.float32))
-    (stats, n_batch), _ = jax.lax.scan(body, init, idx)
+    if prefetch and idx.shape[0] > 1:
+        # shift the draw order one step: step t computes on the chunk
+        # loaded at t-1 and loads the chunk for t+1 (the last step's load
+        # is a harmless repeat that nothing computes on)
+        nxt = jnp.concatenate([idx[1:], idx[-1:]])
+
+        def body(carry, i_nxt):
+            (acc, nb), (xi, mi) = carry
+            x_nxt, m_nxt = load(i_nxt)
+            st = call(xi, mi)
+            out = (jax.tree.map(jnp.add, acc, st), nb + jnp.sum(mi))
+            return (out, (x_nxt, m_nxt)), None
+
+        ((stats, n_batch), _), _ = jax.lax.scan(
+            body, (init, load(idx[0])), nxt)
+    else:
+        def body(carry, i):
+            acc, nb = carry
+            xi, mi = load(i)
+            st = call(xi, mi)
+            return (jax.tree.map(jnp.add, acc, st), nb + jnp.sum(mi)), None
+
+        (stats, n_batch), _ = jax.lax.scan(body, init, idx)
     return stats, n_batch

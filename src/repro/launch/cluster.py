@@ -109,7 +109,9 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
                    chunks: int = 1, restarts: int = 1,
                    mode: str = "full", batch_chunks: int = 0,
                    decay: float = 1.0, kernel_backend: str | None = None,
-                   model=None, desired_accuracy: float | None = None):
+                   model=None, desired_accuracy: float | None = None,
+                   stats_compression: str = "none", prefetch: bool = False,
+                   return_params: bool = False):
     """Early-stopped production run; optional shard_map over host devices.
 
     ``chunks`` streams each sweep over N/C pieces; ``restarts`` runs R seeds
@@ -131,6 +133,12 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
     reference run: stop only when the centroids freeze.  An h-based stop at
     h*=0 quits on fp32 J plateaus before the Lloyd fixed point (see
     ``kmeans_fit_full``), which would corrupt the Time_full baseline.
+
+    ``stats_compression="int8_ef"`` routes the sharded sweeps' stats
+    reductions through the int8 ring all-reduce with error feedback
+    (``EngineConfig.stats_compression``); ``prefetch`` double-buffers the
+    chunk scan.  ``return_params=True`` appends the fitted parameters to
+    the result tuple (for ``--save-artifact``).
     """
     from repro.core.engine import ClusteringEngine, EngineConfig
     key = jax.random.PRNGKey(seed)
@@ -139,10 +147,17 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
     shard = _resolve_shard(shard, len(jax.devices()))
     full_reference = (algorithm == "kmeans" and model is None
                       and float(h_star) == 0.0 and mode == "full")
+    if stats_compression != "none" and full_reference:
+        raise ValueError(
+            "the full-convergence k-means reference stops on frozen "
+            "centroids, which int8-quantised stats never reach — run the "
+            "reference with stats_compression='none'")
     cfg_kw = dict(max_iters=max_iters, patience=patience, chunks=chunks,
                   use_kernel=use_kernel, use_h_stop=not full_reference,
-                  stop_when_frozen=(algorithm == "kmeans"),
-                  mode=mode, batch_chunks=batch_chunks, decay=decay)
+                  stop_when_frozen=(algorithm == "kmeans"
+                                    and stats_compression == "none"),
+                  mode=mode, batch_chunks=batch_chunks, decay=decay,
+                  stats_compression=stats_compression, prefetch=prefetch)
     if use_kernel and kernel_backend not in (None, "auto"):
         cfg_kw["kernel_backend"] = kernel_backend
     if mode == "minibatch":
@@ -173,8 +188,9 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
         rr = (eng.fit_restarts_sharded(x, params0, _data_mesh()) if shard
               else eng.fit_restarts(x, params0))
         jax.block_until_ready(rr.best.labels)
-        return (rr.best.labels, float(rr.best.objective),
-                int(rr.best.n_iters), time.time() - t0)
+        out = (rr.best.labels, float(rr.best.objective),
+               int(rr.best.n_iters), time.time() - t0)
+        return out + (rr.best.params,) if return_params else out
 
     c0 = core.kmeans_plus_plus_init(key, x, k, chunks=chunks)
     h_star = cfg.h_star
@@ -195,15 +211,18 @@ def run_production(x, k: int, algorithm: str, h_star: float, *,
         t0 = time.time()
         res = eng.fit_sharded(x, params0, _data_mesh())
         jax.block_until_ready(res.labels)
-        return (res.labels, float(res.objective), int(res.n_iters),
-                time.time() - t0)
+        out = (res.labels, float(res.objective), int(res.n_iters),
+               time.time() - t0)
+        return out + (res.params,) if return_params else out
 
     eng = ClusteringEngine(algorithm, cfg)
     params0 = c0 if algorithm == "kmeans" else em_gmm.init_from_kmeans(x, c0)
     t0 = time.time()
     res = eng.fit(x, params0)
     jax.block_until_ready(res.labels)
-    return res.labels, float(res.objective), int(res.n_iters), time.time() - t0
+    out = (res.labels, float(res.objective), int(res.n_iters),
+           time.time() - t0)
+    return out + (res.params,) if return_params else out
 
 
 def main():
@@ -251,15 +270,31 @@ def main():
                          "under plain full-batch sweeps ('full', the "
                          "transfer regime).  Default: matched when --mode "
                          "minibatch, else full")
+    ap.add_argument("--stats-compression", default="none",
+                    choices=["none", "int8_ef"],
+                    help="compress the sharded sweeps' stats reductions "
+                         "(int8 ring all-reduce with error feedback; "
+                         "requires --shard)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="double-buffer the streaming chunk scan so the "
+                         "next chunk's load overlaps the current compute "
+                         "(bit-identical results)")
     ap.add_argument("--save-model", default=None, metavar="PATH",
                     help="write the fitted LongTailModel JSON (regression "
                          "+ harvest-regime provenance) to PATH")
+    ap.add_argument("--save-artifact", default=None, metavar="PATH",
+                    help="write a ClusterArtifact JSON (fitted params + "
+                         "LongTailModel) from the first production group — "
+                         "loadable by serve_cluster --registry")
     ap.add_argument("--instance", default="m5.large")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     if args.kernel_backend != "auto" and not args.use_kernel:
         ap.error("--kernel-backend only applies with --use-kernel")
+    if args.stats_compression != "none" and not args.shard:
+        ap.error("--stats-compression only applies with --shard (it "
+                 "compresses the cross-device stats reduction)")
 
     if args.mode == "minibatch":
         # make the bare `--mode minibatch` recipe runnable: the full-sweep
@@ -319,15 +354,20 @@ def main():
     # work (§5.2 "image = group"; the regression transfers within-regime)
     t_actual = t_full = 0.0
     accs, iters_es, iters_fu = [], [], []
+    artifact_params = None
     for gi, g in enumerate(prod_g):
         # the fitted LongTailModel drives the threshold through EngineConfig
-        labels, j, it1, t1 = run_production(
+        labels, j, it1, t1, *rest = run_production(
             g, args.k, args.algorithm, h_star, max_iters=args.max_iters,
             seed=100 + gi, shard=args.shard, use_kernel=args.use_kernel,
             chunks=args.chunks, restarts=args.restarts,
             mode=args.mode, batch_chunks=args.batch_chunks, decay=args.decay,
             kernel_backend=args.kernel_backend,
-            model=model, desired_accuracy=args.desired_accuracy)
+            model=model, desired_accuracy=args.desired_accuracy,
+            stats_compression=args.stats_compression, prefetch=args.prefetch,
+            return_params=(args.save_artifact is not None and gi == 0))
+        if rest:
+            artifact_params = rest[0]
         # the full-convergence baseline always runs full sweeps — it is the
         # Time_full / 100%-accuracy reference the savings are measured from
         labels_f, j_f, it2, t2 = run_production(
@@ -341,6 +381,18 @@ def main():
         iters_es.append(int(it1))
         iters_fu.append(int(it2))
     acc = float(np.mean(accs))
+    if args.save_artifact:
+        # host-side copy of the first group's early-stopped fit, paired
+        # with the stop-model that certified it — the registry unit
+        # serve_cluster --registry loads
+        art = core.ClusterArtifact(
+            name=f"{args.dataset}-{args.algorithm}-k{args.k}",
+            algorithm=args.algorithm,
+            params=jax.tree.map(np.asarray, artifact_params),
+            model=model, desired_accuracy=args.desired_accuracy)
+        art.save(args.save_artifact)
+        print(f"saved ClusterArtifact ({art.k} clusters, d={art.d}) → "
+              f"{args.save_artifact}")
     rep = core.report(t_actual, t_full, time_train_s=t_train,
                       instance=args.instance)
     print(f"early-stop: {iters_es} iters {t_actual:.2f}s | "

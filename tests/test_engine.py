@@ -294,6 +294,63 @@ def test_engine_config_validation():
             EngineConfig(kernel_backend="interpret")
 
 
+def test_engine_config_compression_validation():
+    """ISSUE 7: the stats_compression knobs fail loud on every unusable
+    combination instead of silently running uncompressed (or deadlocking
+    a frozen-centroid stop that can never fire)."""
+    with pytest.raises(ValueError, match="unknown stats_compression"):
+        EngineConfig(stats_compression="fp8")
+    with pytest.raises(ValueError, match="no effect"):
+        EngineConfig(stats_axis_size=8)       # stray knob without int8_ef
+    with pytest.raises(ValueError, match="stop_when_frozen"):
+        EngineConfig(stats_compression="int8_ef", stop_when_frozen=True)
+    with pytest.raises(ValueError, match="single-axis"):
+        EngineConfig(stats_compression="int8_ef",
+                     axis_name=("pod", "data"))
+    with pytest.raises(ValueError, match="stats_axis_size"):
+        EngineConfig(stats_compression="int8_ef", axis_name="data")
+    # the combinations the sharded drivers build are valid
+    EngineConfig(stats_compression="int8_ef")
+    EngineConfig(stats_compression="int8_ef", axis_name="data",
+                 stats_axis_size=8)
+
+
+def test_prefetch_bit_identical_single_device(blobs, c0):
+    """prefetch=True double-buffers the chunk scan without changing chunk
+    order or accumulation: bit-identical fits, full-streaming and
+    minibatch."""
+    for base in (dict(max_iters=60, chunks=4, stop_when_frozen=True),
+                 dict(mode="minibatch", chunks=8, batch_chunks=2,
+                      patience=3, max_iters=120, seed=11,
+                      stop_when_frozen=True)):
+        a = ClusteringEngine("kmeans", EngineConfig(**base)).fit(
+            blobs, c0, h_star=1e-4)
+        b = ClusteringEngine("kmeans", EngineConfig(
+            prefetch=True, **base)).fit(blobs, c0, h_star=1e-4)
+        assert int(a.n_iters) == int(b.n_iters)
+        np.testing.assert_array_equal(np.asarray(a.params),
+                                      np.asarray(b.params))
+        np.testing.assert_array_equal(np.asarray(a.labels),
+                                      np.asarray(b.labels))
+
+
+def test_stats_wire_bytes_leaf_policy():
+    """Analytic bytes mirror the reducer's leaf policy: int8 moves
+    1 byte/element + one f32 scale per array leaf, scalar leaves stay f32,
+    and the ≥3× fp32/int8 ratio the artifact gates holds at k=8, d=8."""
+    from repro.core.engine import get_algorithm, stats_wire_bytes
+    params = jnp.zeros((8, 8), jnp.float32)
+    stats = get_algorithm("kmeans").zero_stats(params)
+    fp32 = stats_wire_bytes(stats, 8, "none")
+    int8 = stats_wire_bytes(stats, 8, "int8_ef")
+    # payloads before the ring factor: (64+8+1)·4 = 292 B vs
+    # (64+8)·1 + 2·4 scales + 4 (scalar J) = 84 B
+    assert fp32 == (2 * 7 * 292) // 8 == 511
+    assert int8 == (2 * 7 * 84) // 8 == 147
+    assert fp32 / int8 >= 3.0
+    assert stats_wire_bytes(stats, 1, "int8_ef") == 0   # no ring, no wire
+
+
 def test_engine_config_unregistered_backend_fails_at_dispatch(blobs, c0):
     """Custom register_backend() names are legal in the config; a name no
     op registered fails loud at the first dispatch with the available

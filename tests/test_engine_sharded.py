@@ -219,6 +219,128 @@ def test_fit_sharded_needs_data_axis(blobs, c0, mesh8):
 
 
 # --------------------------------------------------------------------------
+# int8-EF compressed stats reductions (ISSUE 7): the sharded drivers with
+# stats_compression="int8_ef" ride the ppermute ring + error feedback in
+# the centred compression basis — the Eq. 7 stop must track the fp32 psum
+# trajectory (the tentpole parity claim)
+# --------------------------------------------------------------------------
+
+MB_INT8 = dict(MB, stats_compression="int8_ef")
+
+
+def test_sharded_int8_minibatch_kmeans_stop_parity(blobs, c0, mesh8):
+    """int8 ring vs fp32 psum on the same sharded minibatch fit: identical
+    stop iteration (the centred basis shrinks the quantisation error with
+    the residual parameter motion, so h stays on the fp32 trajectory)."""
+    ref = ClusteringEngine("kmeans", EngineConfig(**MB)).fit_sharded(
+        blobs, c0, _data_mesh(mesh8), h_star=1e-3)
+    res = ClusteringEngine("kmeans", EngineConfig(**MB_INT8)).fit_sharded(
+        blobs, c0, _data_mesh(mesh8), h_star=1e-3)
+    assert abs(int(res.n_iters) - int(ref.n_iters)) <= 1, \
+        (int(res.n_iters), int(ref.n_iters))
+    np.testing.assert_allclose(res.params, ref.params, rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(float(res.objective), float(ref.objective),
+                               rtol=1e-2)
+    assert float((res.labels == ref.labels).mean()) > 0.99
+
+
+def test_sharded_int8_em_close(blobs, c0, mesh8):
+    """EM's variance stats are the catastrophic-cancellation case the
+    centred basis exists for: raw int8 second moments turn 1% wire error
+    into ~80% variance error; centred, the fit stays within a couple of
+    boundary iterations and the loglik matches to fp noise."""
+    p0 = em_gmm.init_from_kmeans(blobs, c0)
+    ref = ClusteringEngine("em", EngineConfig(**MB)).fit_sharded(
+        blobs, p0, _data_mesh(mesh8), h_star=1e-3)
+    res = ClusteringEngine("em", EngineConfig(**MB_INT8)).fit_sharded(
+        blobs, p0, _data_mesh(mesh8), h_star=1e-3)
+    assert abs(int(res.n_iters) - int(ref.n_iters)) <= 2, \
+        (int(res.n_iters), int(ref.n_iters))
+    np.testing.assert_allclose(float(res.objective), float(ref.objective),
+                               rtol=1e-3)
+
+
+def test_sharded_int8_restarts_best_agree(blobs, mesh8):
+    """Per-restart EF state threads through the vmapped while_loop carry:
+    the compressed fleet picks the same winner as the fp32 fleet."""
+    eng = ClusteringEngine("kmeans", EngineConfig(**MB))
+    eng8 = ClusteringEngine("kmeans", EngineConfig(**MB_INT8))
+    params0 = eng.init_restarts(jax.random.PRNGKey(9), blobs, K, 4)
+    ref = eng.fit_restarts_sharded(blobs, params0, _data_mesh(mesh8),
+                                   h_star=1e-3)
+    rr = eng8.fit_restarts_sharded(blobs, params0, _data_mesh(mesh8),
+                                   h_star=1e-3)
+    assert int(rr.best_index) == int(ref.best_index)
+    np.testing.assert_allclose(rr.objectives, ref.objectives, rtol=1e-2)
+    assert np.max(np.abs(np.asarray(rr.n_iters, np.int64)
+                         - np.asarray(ref.n_iters, np.int64))) <= 2
+
+
+def test_sharded_int8_full_mode_runs(blobs, c0, mesh8):
+    """Full-sweep mode under compression: the whole-dataset stats ride the
+    ring too (not just minibatch draws)."""
+    cfg = EngineConfig(max_iters=100, chunks=4,
+                       stats_compression="int8_ef")
+    ref = ClusteringEngine("kmeans", EngineConfig(
+        max_iters=100, chunks=4)).fit_sharded(
+        blobs, c0, _data_mesh(mesh8), h_star=1e-3)
+    res = ClusteringEngine("kmeans", cfg).fit_sharded(
+        blobs, c0, _data_mesh(mesh8), h_star=1e-3)
+    assert abs(int(res.n_iters) - int(ref.n_iters)) <= 1
+    assert float((res.labels == ref.labels).mean()) > 0.99
+
+
+def test_sharded_int8_wire_is_int8(mesh8):
+    """The compiled reduction moves s8 through collective-permute — the
+    compression must survive jit/while_loop staging, not silently promote
+    back to f32 psum."""
+    import re
+    from functools import partial
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.core.engine import _stats_reducer, get_algorithm
+
+    alg = get_algorithm("kmeans")
+    cfg = EngineConfig(axis_name="d", stats_axis_size=8,
+                       stats_compression="int8_ef")
+    init_ef, reduce_stats = _stats_reducer(alg, cfg)
+    params = jnp.zeros((K, 3), jnp.float32)
+    stats = alg.zero_stats(params)
+    ef = init_ef(stats)
+
+    def f(stats, ef):
+        return reduce_stats(stats, ef, params)
+
+    g = shard_map(f, mesh=mesh8,
+                  in_specs=(jax.tree.map(lambda _: P(), stats),
+                            jax.tree.map(lambda _: P(), ef)),
+                  out_specs=(jax.tree.map(lambda _: P(), stats),
+                             jax.tree.map(lambda _: P(), ef)),
+                  check_vma=False)
+    hlo = jax.jit(g).lower(stats, ef).compile().as_text()
+    assert "collective-permute" in hlo
+    assert re.search(r"s8\[[^\]]*\][^=\n]*collective-permute", hlo) \
+        or re.search(r"collective-permute[^\n]*s8\[", hlo), \
+        "no s8 collective-permute in compiled reduction"
+
+
+def test_sharded_prefetch_bit_identical(blobs, c0, mesh8):
+    """prefetch=True only reorders loads (same chunk order, same adds):
+    the sharded fit must be bit-identical, full and minibatch."""
+    for base in (dict(max_iters=60, chunks=4, stop_when_frozen=True), MB):
+        a = ClusteringEngine("kmeans", EngineConfig(**base)).fit_sharded(
+            blobs, c0, _data_mesh(mesh8), h_star=1e-4)
+        b = ClusteringEngine("kmeans", EngineConfig(
+            prefetch=True, **base)).fit_sharded(
+            blobs, c0, _data_mesh(mesh8), h_star=1e-4)
+        assert int(a.n_iters) == int(b.n_iters)
+        np.testing.assert_array_equal(np.asarray(a.params),
+                                      np.asarray(b.params))
+        np.testing.assert_array_equal(np.asarray(a.labels),
+                                      np.asarray(b.labels))
+
+
+# --------------------------------------------------------------------------
 # Trace harvesting under shard_map (ISSUE 5): psum'd stats make the
 # recorded (J, h, params) history replicated and device-count invariant
 # --------------------------------------------------------------------------

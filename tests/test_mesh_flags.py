@@ -1,0 +1,59 @@
+"""launch.mesh: host-mesh divisibility guard (ISSUE 7 satellite — the old
+builder silently floor-divided devices away) and the latency-hiding
+XLA-flag toggle helpers the sharded_overlap bench spawns workers with."""
+import os
+
+import pytest
+
+from repro.launch.mesh import (LATENCY_HIDING_FLAGS, latency_hiding_xla_flags,
+                               make_host_mesh, overlap_env)
+
+
+def test_make_host_mesh_rejects_non_divisor(mesh8):
+    """8 visible devices, model_axis=3: a (2, 3) mesh would silently drop
+    2 devices — must raise naming both numbers and the dropped count."""
+    with pytest.raises(ValueError) as ei:
+        make_host_mesh(model_axis=3)
+    msg = str(ei.value)
+    assert "model_axis=3" in msg and "8 available" in msg
+    assert "drop 2" in msg
+
+
+def test_make_host_mesh_rejects_nonpositive(mesh8):
+    with pytest.raises(ValueError):
+        make_host_mesh(model_axis=0)
+
+
+def test_make_host_mesh_valid_divisors(mesh8):
+    for model_axis in (1, 2, 4, 8):
+        mesh = make_host_mesh(model_axis=model_axis)
+        assert mesh.shape["data"] * mesh.shape["model"] == 8
+        assert mesh.shape["model"] == model_axis
+
+
+def test_latency_hiding_flags_append_without_duplicates():
+    base = "--xla_force_host_platform_device_count=8"
+    out = latency_hiding_xla_flags(base)
+    parts = out.split()
+    assert parts[0] == base                     # base flags survive, first
+    for f in LATENCY_HIDING_FLAGS:
+        assert f in parts
+    # idempotent: a second application adds nothing
+    again = latency_hiding_xla_flags(out)
+    assert again == out
+    # an explicit setting of one of the flags is respected, not duplicated
+    pre = "--xla_gpu_enable_latency_hiding_scheduler=false"
+    merged = latency_hiding_xla_flags(pre).split()
+    names = [p.split("=", 1)[0] for p in merged]
+    assert names.count("--xla_gpu_enable_latency_hiding_scheduler") == 1
+    assert pre in merged
+
+
+def test_overlap_env_toggles_without_mutating_environ():
+    before = os.environ.get("XLA_FLAGS")
+    env_on = overlap_env(enable=True)
+    env_off = overlap_env(enable=False)
+    assert os.environ.get("XLA_FLAGS") == before    # copies, not mutation
+    for f in LATENCY_HIDING_FLAGS:
+        assert f in env_on["XLA_FLAGS"].split()
+    assert env_off.get("XLA_FLAGS", "") == (before or "")

@@ -198,6 +198,75 @@ def test_cluster_cli_smoke(tmp_path):
     assert rep["iters_earlystop"] <= rep["iters_full"]
 
 
+def test_cluster_save_artifact_serves(tmp_path):
+    """ISSUE 7 satellite, fit → save → serve: the cluster CLI's
+    --save-artifact JSON must round-trip through serve_cluster --registry
+    (the registry layout the assignment server consumes)."""
+    from repro.core import ClusterArtifact
+    registry = tmp_path / "registry"
+    registry.mkdir()
+    art_path = registry / "skin-kmeans-k2.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.cluster", "--dataset", "skin",
+         "--k", "2", "--n", "9000", "--group-size", "3000",
+         "--train-groups", "2", "--prod-groups", "1", "--max-iters", "60",
+         "--save-artifact", str(art_path)],
+        capture_output=True, text=True, timeout=600, cwd="/root/repo",
+        env=_cli_env())
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    art = ClusterArtifact.load(str(art_path))     # well-formed on disk
+    assert art.algorithm == "kmeans" and art.k == 2 and art.d == 4
+    assert art.model.threshold_for(0.99) > 0      # stop-model rides along
+
+    out = tmp_path / "serve.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve_cluster",
+         "--registry", str(registry), "--requests", "8",
+         "--out", str(out)],
+        capture_output=True, text=True, timeout=600, cwd="/root/repo",
+        env=_cli_env())
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rep = json.loads(out.read_text())
+    assert rep["n_results"] == 8
+
+
+def test_run_production_return_params_opt_in():
+    """The 4-tuple contract at every existing call site stays; the 5th
+    element appears only on request, on each of the three return paths."""
+    data = load("skin", n=2000, seed=1)
+    out = run_production(data, 2, "kmeans", 1e-3, max_iters=20, seed=1)
+    assert len(out) == 4
+    for kw in (dict(), dict(restarts=2)):
+        out = run_production(data, 2, "kmeans", 1e-3, max_iters=20, seed=1,
+                             return_params=True, **kw)
+        assert len(out) == 5
+        assert np.shape(out[4]) == (2, 4)         # centroids [K, D]
+
+
+def test_run_production_compression_guards():
+    """stats_compression must not silently corrupt the frozen-stop
+    full-convergence reference (h*=0 kmeans baseline)."""
+    data = load("skin", n=2000, seed=1)
+    with pytest.raises(ValueError, match="full-convergence"):
+        run_production(data, 2, "kmeans", 0.0, max_iters=20,
+                       stats_compression="int8_ef")
+
+
+def test_sharded_compressed_production(mesh8):
+    """--shard --stats-compression int8_ef end-to-end: the compressed run
+    stops within a boundary iteration of the fp32 psum run and agrees on
+    the partition."""
+    data = load("skin", n=8192, seed=4)
+    kw = dict(max_iters=80, seed=5, shard=True, mode="minibatch",
+              chunks=8, batch_chunks=2)
+    l1, j1, i1, _ = run_production(data, 2, "kmeans", 1e-3, **kw)
+    l2, j2, i2, _ = run_production(data, 2, "kmeans", 1e-3,
+                                   stats_compression="int8_ef",
+                                   prefetch=True, **kw)
+    assert abs(int(i1) - int(i2)) <= 1, (i1, i2)
+    assert float(core.rand_index(l1, l2, 2, 2)) > 0.999
+
+
 def test_train_cli_smoke(tmp_path):
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-8b",
