@@ -1,0 +1,31 @@
+"""Static analysis of the engine's compiled graphs (ISSUE 8).
+
+The repo's worst bugs were *statically detectable graph-contract
+violations*: the int8 ring-allreduce deadlock (collectives diverging
+across ``while_loop`` trip counts, PR 7), the fp32 J-plateau stop (PR 1),
+and kernel-backend config leaking into jit cache reuse (PR 4).  This
+package inspects jaxprs and compiled HLO of the engine's fit drivers —
+WITHOUT running them — and enforces the distributed-correctness and
+performance contracts as named, suppressible rules:
+
+  · :mod:`repro.analysis.hlo_ir`       — the shared HLO text parser
+    (promoted from ``launch/hlo_cost.py``; the cost model now imports it)
+  · :mod:`repro.analysis.graph_rules`  — jaxpr/HLO passes: collective
+    uniformity (GC001), hot-loop hygiene (GC002/GC003/GC004), wire-byte
+    cross-check (GC005), recompile sentinel (GC006)
+  · :mod:`repro.analysis.ast_rules`    — repo-specific source lint:
+    kernel ``mask=`` contract (AST001), hard-coded axis names (AST002),
+    Python RNG in traced code (AST003)
+  · :mod:`repro.analysis.engine_contracts` — the harness that traces
+    ``fit_sharded`` / ``fit_restarts_sharded`` under every
+    ``(mode, use_kernel, stats_compression, prefetch)`` combination and
+    runs the graph rules over each cell
+  · :mod:`repro.analysis.report`       — :class:`Finding` / :class:`Report`
+    (rule catalogue, suppression, text/JSON rendering)
+
+CLI: ``python -m repro.launch.lint`` (``--rules``, ``--suppress``,
+``--config-matrix``, ``--format {text,json}``; nonzero exit on any
+unsuppressed violation) — the ``graph-lint`` CI job runs the full matrix.
+"""
+from repro.analysis.report import (  # noqa: F401
+    Finding, Report, RULE_CATALOGUE, apply_suppressions)

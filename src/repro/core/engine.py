@@ -113,6 +113,7 @@ class KMeansAlgorithm:
         return jnp.zeros((params.shape[0],), jnp.float32)
 
     def minibatch_update(self, params, stats, carry, n_batch, decay):
+        del n_batch  # EWA uses decay directly; EM's leg needs the count
         sums, counts, _ = stats
         return _km.minibatch_update_centroids(params, sums, counts, carry,
                                               decay)
@@ -136,6 +137,7 @@ class KMeansAlgorithm:
         return labels, (sums, counts, j)
 
     def update(self, params, stats, n_total):
+        del n_total  # centroid means normalise by per-cluster counts
         sums, counts, _ = stats
         return _km.update_centroids(params, sums, counts)
 
@@ -247,6 +249,7 @@ class EMAlgorithm:
     def moved(self, new_params, params):
         # EM has no frozen-partition fixed point at fp granularity; the
         # engine never gates EM on movement (stop_when_frozen=False).
+        del new_params, params
         return jnp.asarray(True)
 
 
@@ -533,6 +536,17 @@ class RestartResult(NamedTuple):
     traces: Any = None          # [R, T] Trace when config.trace, else None
 
 
+class ShardedProgram(NamedTuple):
+    """A shard_map'd fit program, its concrete arguments, and the
+    mesh-resolved config — built by ``sharded_fit_callable`` /
+    ``sharded_restarts_callable`` so callers can run (``fn(*args)``),
+    trace (``jax.make_jaxpr(fn)(*args)``) or compile-without-running
+    (``jax.jit(fn).lower(*args)``) the exact production graph."""
+    fn: Any                     # shard_map'd callable
+    args: tuple                 # (xc, mask, params0, h_star) concrete arrays
+    config: Any                 # EngineConfig with axis_name/stats_axis_size
+
+
 # --------------------------------------------------------------------------
 # Streaming sweep
 # --------------------------------------------------------------------------
@@ -589,6 +603,7 @@ def _stats_reducer(alg, config: EngineConfig):
                 lambda stats, ef, params: (stats, ef))
 
         def reduce_psum(stats, ef, params):
+            del params  # uncompressed leg has no error-feedback state
             return jax.tree.map(
                 lambda a: jax.lax.psum(a, config.axis_name), stats), ef
 
@@ -1298,18 +1313,20 @@ class ClusteringEngine:
         (the chunk layout is row-major; padding rows have mask 0)."""
         return labels.reshape(-1)[mask.reshape(-1) > 0]
 
-    def fit_sharded(self, x, params0, mesh, h_star=None) -> EngineResult:
-        """Distributed fit under ``shard_map`` — both engine modes.
+    def sharded_fit_callable(self, x, params0, mesh,
+                             h_star=None) -> "ShardedProgram":
+        """The shard_map'd fit program and its concrete arguments, WITHOUT
+        running it.
 
-        The points are chunked *globally* to [C, P, D] (the engine's one
-        chunk layout) and each chunk's rows are sharded over the mesh's
-        data axes, so a shard's local chunk c is a row-slice of global
-        chunk c.  Per iteration every shard draws the same ``batch_chunks``
-        chunk indices (the sampling key is replicated), computes stats over
-        its resident slice, and psums once — the subsample, the
-        learning-rate update, and the paired Eq. 7 stop are therefore
-        identical to the single-device run up to fp32 reduction order.
-        Labels cover all N input rows (chunk padding is stripped).
+        ``prog.fn(*prog.args)`` executes the fit;
+        ``jax.make_jaxpr(prog.fn)(*prog.args)`` traces it and
+        ``jax.jit(prog.fn).lower(*prog.args)`` compiles it — the static
+        graph-contract rules in :mod:`repro.analysis` inspect both forms
+        through this hook, so the linter checks the *same* program
+        ``fit_sharded`` runs, not a reconstruction.  ``prog.config`` is
+        the mesh-resolved :class:`EngineConfig` (``axis_name`` /
+        ``stats_axis_size`` filled in); ``prog.args[1]`` is the padding
+        mask.
         """
         from jax.sharding import PartitionSpec as P
         cfg, xc, mask, xc_spec, mask_spec = self._sharded_setup(x, mesh)
@@ -1329,19 +1346,33 @@ class ClusteringEngine:
                                    objective=P(), n_iters=P(), h=P(),
                                    trace=tr_spec),
             check_vma=False)
-        res = fit(xc, mask, params0, jnp.asarray(hs, jnp.float32))
+        return ShardedProgram(
+            fit, (xc, mask, params0, jnp.asarray(hs, jnp.float32)), cfg)
+
+    def fit_sharded(self, x, params0, mesh, h_star=None) -> EngineResult:
+        """Distributed fit under ``shard_map`` — both engine modes.
+
+        The points are chunked *globally* to [C, P, D] (the engine's one
+        chunk layout) and each chunk's rows are sharded over the mesh's
+        data axes, so a shard's local chunk c is a row-slice of global
+        chunk c.  Per iteration every shard draws the same ``batch_chunks``
+        chunk indices (the sampling key is replicated), computes stats over
+        its resident slice, and psums once — the subsample, the
+        learning-rate update, and the paired Eq. 7 stop are therefore
+        identical to the single-device run up to fp32 reduction order.
+        Labels cover all N input rows (chunk padding is stripped).
+        """
+        prog = self.sharded_fit_callable(x, params0, mesh, h_star)
+        mask = prog.args[1]
+        res = prog.fn(*prog.args)
         return res._replace(labels=self._strip_chunk_padding(res.labels,
                                                              mask))
 
-    def fit_restarts_sharded(self, x, params0=None, mesh=None, *, key=None,
-                             k=None, restarts=None,
-                             h_star=None) -> RestartResult:
-        """Vmapped multi-restart fit *inside* ``shard_map`` (vmap-of-psum):
-        every restart keeps its own replicated chunk-draw stream and stop
-        mask, stats are psum'd per restart, and all shards agree on each
-        restart's stop iteration and on the final best-objective index.
-        Accepts stacked ``params0`` or (key, k, restarts), like
-        ``fit_restarts``."""
+    def sharded_restarts_callable(self, x, params0=None, mesh=None, *,
+                                  key=None, k=None, restarts=None,
+                                  h_star=None) -> "ShardedProgram":
+        """The shard_map'd multi-restart program + concrete args, without
+        running it — the restarts twin of :meth:`sharded_fit_callable`."""
         from jax.sharding import PartitionSpec as P
         if mesh is None:
             raise ValueError("fit_restarts_sharded needs a mesh")
@@ -1372,6 +1403,21 @@ class ClusteringEngine:
                 best_index=P(), objectives=P(None), n_iters=P(None),
                 traces=tr_spec),
             check_vma=False)
-        rr = fit(xc, mask, params0, jnp.asarray(hs, jnp.float32))
+        return ShardedProgram(
+            fit, (xc, mask, params0, jnp.asarray(hs, jnp.float32)), cfg)
+
+    def fit_restarts_sharded(self, x, params0=None, mesh=None, *, key=None,
+                             k=None, restarts=None,
+                             h_star=None) -> RestartResult:
+        """Vmapped multi-restart fit *inside* ``shard_map`` (vmap-of-psum):
+        every restart keeps its own replicated chunk-draw stream and stop
+        mask, stats are psum'd per restart, and all shards agree on each
+        restart's stop iteration and on the final best-objective index.
+        Accepts stacked ``params0`` or (key, k, restarts), like
+        ``fit_restarts``."""
+        prog = self.sharded_restarts_callable(
+            x, params0, mesh, key=key, k=k, restarts=restarts, h_star=h_star)
+        mask = prog.args[1]
+        rr = prog.fn(*prog.args)
         return rr._replace(best=rr.best._replace(
             labels=self._strip_chunk_padding(rr.best.labels, mask)))

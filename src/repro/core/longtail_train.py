@@ -251,7 +251,7 @@ def harvest_traces(plan: TrainingPlan, groups,
             rr = (eng.fit_restarts_sharded(x, params0, mesh)
                   if mesh is not None else eng.fit_restarts(x, params0))
             for ri in range(plan.restarts):
-                tr = jax.tree.map(lambda a: a[ri], rr.traces)
+                tr = jax.tree.map(lambda a, ri=ri: a[ri], rr.traces)
                 out.append(engine_trace_to_rh(
                     tr, x, algorithm=plan.algorithm, k=plan.k,
                     ref_labels=ref))

@@ -19,15 +19,12 @@ substrate) and tests/test_engine_sharded.py (stop-iteration parity of the
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 
 def quantize_int8(x, scale):
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
 
 
 def dequantize_int8(q, scale):

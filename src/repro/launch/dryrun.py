@@ -74,8 +74,9 @@ def _state_shardings(state_struct, mesh, fsdp: bool):
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
-               opts: DryrunOptions = DryrunOptions()):
+               opts: DryrunOptions | None = None):
     """Lower + compile one cell. Returns (compiled, report dict)."""
+    opts = opts if opts is not None else DryrunOptions()
     cfg = get_config(arch)
     if opts.remat is not None:
         cfg = dataclasses.replace(cfg, remat=opts.remat)
@@ -204,7 +205,7 @@ CLUSTER_CELLS = {
 }
 
 
-def lower_cluster_cell(name: str, multi_pod: bool, fused: bool = True):
+def lower_cluster_cell(name: str, multi_pod: bool):
     from repro.core import kmeans as km, em_gmm
     spec = CLUSTER_CELLS[name]
     mesh = make_production_mesh(multi_pod=multi_pod)

@@ -16,35 +16,21 @@ from __future__ import annotations
 import dataclasses
 import re
 
+from repro.analysis.hlo_ir import type_numel_bytes
+
 PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
 HBM_BW = 819e9            # bytes/s per chip
 ICI_BW = 50e9             # bytes/s per link
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-}
 
 _COLL_RE = re.compile(
     r"=\s*(?P<rtype>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
     r"(?P<op>all-gather-start|all-gather|all-reduce-start|all-reduce|"
     r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
     r"\(")
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
 
 
 def _type_bytes(type_str: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
+    return type_numel_bytes(type_str)[1]
 
 
 def collective_bytes(hlo_text: str) -> dict[str, int]:

@@ -13,7 +13,6 @@ the LM-loop generalisation, DESIGN.md §2).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 
 import jax
@@ -21,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import EarlyStopHook, LongTailModel, fit_longtail
+from repro.core import EarlyStopHook, LongTailModel
 from repro.training import Trainer, TrainConfig, OptimizerConfig
 
 

@@ -11,7 +11,6 @@ any backend; the dry-run uses this path so the compiled HLO is analysable).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax
@@ -247,7 +246,7 @@ def attention(p: Params, x, cfg, *, kind: str = "attn", positions=None,
         # q from text stream; k/v from (static) image embeddings
         kv_src = rmsnorm(p["norm"], cross_kv, cfg.norm_eps) if cfg.cross_norm_kv else cross_kv
         q, _, _ = _project_qkv(p, xn, cfg, theta=-1.0,
-                               positions=_default_pos(positions, b, s))
+                               positions=_default_pos(positions, s))
         kvh, dh = cfg.n_kv_heads, cfg.head_dim
         tk = kv_src.shape[1]
         k = (kv_src @ p["wk"].astype(x.dtype)).reshape(b, tk, kvh, dh)
@@ -258,7 +257,7 @@ def attention(p: Params, x, cfg, *, kind: str = "attn", positions=None,
         out = (o.reshape(b, s, -1) @ p["wo"].astype(x.dtype)) * gate
         return hint(out, "act_btd"), cache
 
-    positions = _default_pos(positions, b, s)
+    positions = _default_pos(positions, s)
     q, k, v = _project_qkv(p, xn, cfg, theta, positions)
     q = hint(q, "act_bshd")
 
@@ -299,7 +298,7 @@ def attention(p: Params, x, cfg, *, kind: str = "attn", positions=None,
     return hint(out, "act_btd"), new_cache
 
 
-def _default_pos(positions, b, s):
+def _default_pos(positions, s):
     return jnp.arange(s) if positions is None else positions
 
 

@@ -145,6 +145,7 @@ def moe(p: Params, x, cfg):
 
 def _scatter_only(xn, top_p, top_e, e, k, cap, dtype):
     """Per-group scatter → ([E,C,D] buffer, buf_idx) for the grouped path."""
+    del top_p  # combine weight applies at the gather leg, not here
     t, d = xn.shape
     flat_e = top_e.reshape(-1)
     order = jnp.argsort(flat_e)

@@ -302,7 +302,7 @@ def init_slstm(key, cfg) -> Params:
     }
 
 
-def _slstm_cell(carry, wx_t, r, h_heads):
+def _slstm_cell(carry, wx_t, r):
     """carry = (c, n, m, h) each [B,d]; wx_t [B,4d] precomputed Wx."""
     c, n, m, hprev = carry
     b, d = c.shape
@@ -336,7 +336,7 @@ def slstm(p: Params, x, cfg, state=None):
     r = p["r"].astype(jnp.float32)
 
     def step(carry, wx_t):
-        return _slstm_cell(carry, wx_t, r, h_heads)
+        return _slstm_cell(carry, wx_t, r)
 
     state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
     ht = hs.swapaxes(0, 1)                                   # [B,S,d]

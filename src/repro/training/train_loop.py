@@ -14,7 +14,6 @@ fault-tolerance tests.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -30,6 +30,90 @@ def test_parse_op_line_root_and_noise():
     assert _parse_op_line("// comment") is None
 
 
+# -- parser edge cases (promoted corpus, pinned against repro.analysis.hlo_ir)
+
+
+def test_parse_op_line_unsigiled_name():
+    # newer XLA dumps print some names without the leading % sigil
+    op = _parse_op_line("  add.3 = f32[8]{0} add(%a, %b)")
+    assert op is not None and op.name == "add.3" and op.opcode == "add"
+
+
+def test_parse_op_line_fusion_root():
+    op = _parse_op_line(
+        "  ROOT %fusion.7 = f32[4,4]{1,0} fusion(%p0, %p1), kind=kLoop, "
+        "calls=%fused_computation.3")
+    assert op.opcode == "fusion" and op.name == "fusion.7"
+    assert "calls=%fused_computation.3" in op.rest
+
+
+def test_parse_op_line_tuple_tiled_layout():
+    # tiled layouts carry a colon inside the layout braces
+    op = _parse_op_line(
+        "  %t = (f32[64,128]{1,0:T(8,128)}, s8[16]{0:T(1024)(4,1)}) "
+        "tuple(%a, %b)")
+    assert op.opcode == "tuple"
+    n, b = _type_numel_bytes(op.rtype)
+    assert n == 64 * 128 + 16 and b == 64 * 128 * 4 + 16
+
+
+def test_parse_op_line_nested_tuple_type():
+    op = _parse_op_line("  %g = ((f32[2]{0}, s32[]), f32[4]{0}) "
+                        "get-tuple-element(%w), index=0")
+    assert op.opcode == "get-tuple-element"
+    assert _type_numel_bytes(op.rtype)[0] == 2 + 1 + 4
+
+
+def test_parse_computations_multiline_comment():
+    hlo = """\
+HloModule m
+
+%comp (p: f32[4]) -> f32[4] {
+  %p = f32[4]{0} parameter(0)
+  /* a block comment
+     spanning several lines
+     used to desync the walker */
+  ROOT %r = f32[4]{0} add(%p, %p)
+}
+"""
+    comps = parse_computations(hlo)
+    assert [o.opcode for o in comps["comp"]] == ["parameter", "add"]
+
+
+def test_parse_computations_signatureless_header():
+    hlo = """\
+ENTRY main {
+  c = f32[] constant(1)
+  ROOT r = f32[] add(c, c)
+}
+"""
+    comps = parse_computations(hlo)
+    assert [o.opcode for o in comps["main"]] == ["constant", "add"]
+
+
+def test_trip_count_dynamic_is_none():
+    from repro.analysis.hlo_ir import trip_count
+    comps = parse_computations("""\
+%cond (s: (s32[], f32[])) -> pred[] {
+  %s = (s32[], f32[]) parameter(0)
+  %v = f32[] get-tuple-element(%s), index=1
+  %z = f32[] get-tuple-element(%s), index=1
+  ROOT %lt = pred[] compare(%v, %z), direction=LT
+}
+""")
+    assert trip_count(comps["cond"]) is None
+
+
+def test_hlo_cost_shim_reexports():
+    # the historical import surface survives the promotion
+    import repro.analysis.hlo_ir as hlo_ir
+    import repro.launch.hlo_cost as hlo_cost
+    assert hlo_cost.analyze is hlo_ir.analyze
+    assert hlo_cost._parse_op_line is hlo_ir.parse_op_line
+    assert hlo_cost._type_numel_bytes is hlo_ir.type_numel_bytes
+    assert hlo_cost.COLLECTIVES is hlo_ir.COLLECTIVES
+
+
 @pytest.fixture(scope="module")
 def scan_hlo():
     """Compile a sharded scan on the in-process 8-device host platform

@@ -12,7 +12,6 @@ import numpy as np
 import pytest
 
 from repro import core
-from repro.core import em_gmm
 from repro.data import load, spacenet_pixels
 from repro.launch.cluster import train_regression, run_production
 
