@@ -1,0 +1,137 @@
+"""Cross-backend roofline suite (ISSUE 9).
+
+For every (op × available backend × problem shape) cell, run the
+autotuner's candidate sweep (``repro.kernels.autotune.sweep_op`` — shared
+timing methodology: warmup, ``block_until_ready``, median-of-k), place
+the tuned winner on the measured host roofline, and emit
+``BENCH_roofline.json``::
+
+    PYTHONPATH=src python -m benchmarks.roofline --reps 3
+
+Per cell the row records analytic FLOPs/bytes (from the HLO cost walker
+over the ``xla`` reference — backend-independent), achieved FLOP/s,
+arithmetic intensity, the roofline ceiling fraction, and the
+tuned-vs-default speedup.  The tracked claim is
+``tuned_ge_default_every_cell``: the tuned winner is never slower than
+the hand-picked default (ties allowed — the default is itself a sweep
+candidate, so this holds by construction on quiet machines; CI gates it).
+Backends: ``interpret`` + ``xla`` always; ``tpu``/``gpu`` join
+automatically when the hardware is present.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.kernels import autotune  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_roofline.json")
+
+
+def _parse_args(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.roofline",
+        description="Sweep op x backend x shape cells, report roofline "
+                    "placement and tuned-vs-default speedup.")
+    ap.add_argument("--ops", default=None,
+                    help="comma-separated op names (default: all supported)")
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated backends (default: every backend "
+                         "available per op on this host)")
+    ap.add_argument("--shapes", default=None,
+                    help="comma-separated NxKxD triples applied to every op "
+                         "(default: per-op suite)")
+    ap.add_argument("--reps", type=int, default=5,
+                    help="timed reps per candidate (default 5)")
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--out", default=OUT)
+    return ap.parse_args(argv)
+
+
+def _split(csv):
+    return [t.strip() for t in (csv or "").split(",") if t.strip()] or None
+
+
+def _shapes(csv):
+    if not csv:
+        return None
+    return [tuple(int(p) for p in tok.strip().lower().split("x"))
+            for tok in csv.split(",")]
+
+
+def run(ops=None, backends=None, shapes=None, *, reps=5, warmup=1,
+        timer=None, log=print):
+    """Sweep the cells and return the BENCH payload dict."""
+    ops = list(ops or autotune.SUPPORTED_OPS)
+    peaks = autotune.measure_peaks()
+    rows = []
+    for op in ops:
+        op_backends = [b for b in autotune.available_backends(op)
+                       if backends is None or b in backends]
+        for shape in (shapes or autotune.DEFAULT_SHAPES[op]):
+            n, k, d = shape
+            for bk in op_backends:
+                sw = autotune.sweep_op(op, bk, n=n, k=k, d=d, reps=reps,
+                                       warmup=warmup, timer=timer)
+                tuned_s = sw["winner"]["median_s"]
+                default_s = sw["default"]["median_s"]
+                point = autotune.roofline_point(
+                    sw["flops"], sw["bytes"], tuned_s, peaks)
+                row = {
+                    "op": op, "backend": bk, "n": n, "k": k, "d": d,
+                    "flops": sw["flops"], "bytes": sw["bytes"],
+                    "default_blocks": sw["default"]["blocks"],
+                    "default_median_s": round(default_s, 6),
+                    "tuned_blocks": sw["winner"]["blocks"],
+                    "tuned_median_s": round(tuned_s, 6),
+                    "tuned_speedup_vs_default": round(default_s / tuned_s, 4),
+                    "candidates_swept": len(sw["candidates"]),
+                    **{key: (round(v, 4) if isinstance(v, float) else v)
+                       for key, v in point.items()},
+                }
+                rows.append(row)
+                if log:
+                    log(f"# {op}/{bk} n={n} k={k} d={d}: tuned "
+                        f"{row['tuned_blocks']} {tuned_s * 1e3:.2f}ms "
+                        f"({row['tuned_speedup_vs_default']:.2f}x default, "
+                        f"{row['ceiling_fraction']:.1%} of roofline)")
+    return {
+        "benchmark": "roofline",
+        "device_kind": autotune.device_kind(),
+        "reps": reps,
+        "warmup": warmup,
+        "peaks": {key: (round(v, 3) if isinstance(v, float) else v)
+                  for key, v in peaks.items()},
+        "claims": {
+            "tuned_ge_default_every_cell": all(
+                r["tuned_speedup_vs_default"] >= 1.0 for r in rows),
+        },
+        "note": "achieved FLOP/s on a CPU host measure interpreter/XLA "
+                "sweep throughput against the measured host roofline, not "
+                "accelerator potential; ceiling_fraction > 1 is legal for "
+                "cache-resident working sets (the bandwidth peak is a "
+                "64MiB DRAM stream, L2/L3-resident cells beat it); the "
+                "tracked claim is that the autotuned block shapes never "
+                "lose to the hand-picked TilePolicy defaults (the default "
+                "is a sweep candidate, so ties are the floor)",
+        "rows": rows,
+    }
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+    payload = run(_split(args.ops), _split(args.backends),
+                  _shapes(args.shapes), reps=args.reps, warmup=args.warmup)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {os.path.normpath(args.out)}")
+    return 0 if payload["claims"]["tuned_ge_default_every_cell"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

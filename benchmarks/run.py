@@ -16,6 +16,8 @@ import time
 
 import numpy as np
 
+from benchmarks.timing import time_callable
+
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 _REGISTRY = {}
 
@@ -270,13 +272,9 @@ def kernels():
     rows = []
 
     def timeit(fn, *args, n=5):
-        fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
-            else fn(*args).block_until_ready()
-        t0 = time.time()
-        for _ in range(n):
-            out = fn(*args)
-            jax.block_until_ready(out)
-        return (time.time() - t0) / n * 1e6
+        # shared methodology (benchmarks.timing): warmup + block_until_ready
+        return time_callable(fn, *args, reps=n, warmup=1,
+                             reduce="mean") * 1e6
 
     x = jnp.asarray(rng.normal(0, 5, (100_000, 4)).astype(np.float32))
     c = jnp.asarray(rng.normal(0, 5, (8, 4)).astype(np.float32))
@@ -330,12 +328,7 @@ def engine_scaling():
     rows = []
 
     def timed(fn, *args, reps=3):
-        jax.block_until_ready(fn(*args))             # compile + warm
-        t0 = time.time()
-        for _ in range(reps):
-            out = fn(*args)
-            jax.block_until_ready(out)
-        return (time.time() - t0) / reps
+        return time_callable(fn, *args, reps=reps, warmup=1, reduce="mean")
 
     for chunks in (1, 8, 32):
         eng = ClusteringEngine("kmeans", EngineConfig(
@@ -468,10 +461,9 @@ def minibatch_shard():
                              axis_types=(jax.sharding.AxisType.Auto,))
         res = eng.fit_sharded(x, c0, mesh, h_star=1e-5)   # compile + warm
         jax.block_until_ready(res.labels)
-        t0 = time.time()
-        res = eng.fit_sharded(x, c0, mesh, h_star=1e-5)
-        jax.block_until_ready(res.labels)
-        wall = time.time() - t0
+        wall = time_callable(
+            lambda: eng.fit_sharded(x, c0, mesh, h_star=1e-5).labels,
+            reps=1, warmup=0)
         r = float(core.rand_index(res.labels, rf.labels, k, k))
         rows.append({
             "name": f"minibatch_shard_d{m}", "devices": m,
@@ -651,10 +643,7 @@ def kernel_backends():
             (lambda: engine.fit_sharded(x, c0, mesh, h_star=1e-4))
         res = run()                                   # compile + warm
         jax.block_until_ready(res.labels)
-        t0 = time.time()
-        res = run()
-        jax.block_until_ready(res.labels)
-        return res, time.time() - t0
+        return res, time_callable(lambda: run().labels, reps=1, warmup=0)
 
     rows = []
     baselines = {}

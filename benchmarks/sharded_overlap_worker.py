@@ -26,9 +26,10 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import numpy as np
+
+from benchmarks.timing import time_callable
 
 
 def main():
@@ -89,13 +90,11 @@ def main():
             timed = ClusteringEngine("kmeans", cfg(compression, timed=True))
             rt = timed.fit_sharded(x, c0, mesh)          # compile + warm
             jax.block_until_ready(rt.labels)
-            reps = []
-            for _ in range(3):                # min-of-3: squeeze out host
-                t0 = time.time()              # scheduling noise, the CPU
-                rt = timed.fit_sharded(x, c0, mesh)  # substrate's dominant
-                jax.block_until_ready(rt.labels)     # timing artifact
-                reps.append(time.time() - t0)
-            wall = min(reps)
+            # min-of-3: squeeze out host scheduling noise, the CPU
+            # substrate's dominant timing artifact
+            wall = time_callable(
+                lambda: timed.fit_sharded(x, c0, mesh).labels,
+                reps=3, warmup=0, reduce="min")
 
             rows.append({
                 "leg": args.leg, "devices": m, "compression": compression,

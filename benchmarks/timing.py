@@ -1,0 +1,11 @@
+"""Shared timing methodology for the benchmark harness (ISSUE 9).
+
+Thin re-export of :mod:`repro.kernels.timing` so the bench scripts and
+the kernel autotuner time with one methodology (warmup +
+``block_until_ready`` + median-of-k); the implementation lives in the
+package so ``repro.kernels.autotune`` never depends on the top-level
+``benchmarks`` namespace.
+"""
+from repro.kernels.timing import REDUCERS, time_callable
+
+__all__ = ["REDUCERS", "time_callable"]

@@ -1,4 +1,4 @@
-"""Repo-specific source lint (AST level) — AST001/AST002/AST003.
+"""Repo-specific source lint (AST level) — AST001/AST002/AST003/AST004.
 
 These are contracts the graph passes can't see (they hold at the source
 layer, before tracing):
@@ -15,7 +15,13 @@ layer, before tracing):
   AST003  no Python/numpy RNG calls inside traced functions (decorated
           with jit, passed to lax control flow / shard_map / vmap, or
           nested in one) — host randomness bakes ONE draw into the
-          compiled graph as a constant.
+          compiled graph as a constant;
+  AST004  no hard-coded integer block shapes (``block_n=256`` and
+          friends) at kernel call sites — block resolution belongs to
+          ``layout.tile_policy()`` / the autotune cache, and a literal
+          at the call site silently bypasses both (plus the Triton
+          power-of-two constraint).  ``TilePolicy(...)`` constructor
+          calls are exempt: they ARE the hand-picked defaults.
 
 Any finding can be waived at the flagged line (or the line above) with
 ``# repro-lint: disable=AST002`` (comma-separated ids, or a bare
@@ -191,6 +197,34 @@ def _check_rng_in_traced(tree: ast.Module, relpath: str,
     return findings
 
 
+# ------------------------------------------------------------------ AST004
+
+_BLOCK_KWARGS = frozenset({"block_n", "block_q", "block_k", "block_rows"})
+
+
+def _check_block_literals(tree: ast.Module, relpath: str,
+                          lines: list[str]) -> list[Finding]:
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or _fn_name(node) == "TilePolicy":
+            continue
+        for kw in node.keywords:
+            if kw.arg in _BLOCK_KWARGS and \
+                    isinstance(kw.value, ast.Constant) and \
+                    isinstance(kw.value.value, int) and \
+                    not isinstance(kw.value.value, bool) and \
+                    not _suppressed(lines, kw.value.lineno, "AST004"):
+                findings.append(Finding(
+                    "AST004", f"{relpath}:{kw.value.lineno}",
+                    f"'{_fn_name(node)}' call hard-codes {kw.arg}="
+                    f"{kw.value.value} — block shapes resolve through "
+                    "layout.tile_policy() / the autotune cache; a literal "
+                    "here bypasses backend alignment (incl. the Triton "
+                    "power-of-two rule) and pins every backend to one "
+                    "shape"))
+    return findings
+
+
 # ------------------------------------------------------------------ driver
 
 def check_source(source: str, relpath: str) -> list[Finding]:
@@ -206,6 +240,7 @@ def check_source(source: str, relpath: str) -> list[Finding]:
         findings += _check_kernel_mask(tree, relpath, lines)
     findings += _check_axis_literals(tree, relpath, lines)
     findings += _check_rng_in_traced(tree, relpath, lines)
+    findings += _check_block_literals(tree, relpath, lines)
     return findings
 
 

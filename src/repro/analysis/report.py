@@ -71,6 +71,12 @@ RULE_CATALOGUE: dict[str, tuple[str, str, str]] = {
         "no Python/numpy RNG inside jit-traced or lax-control-flow "
         "functions — host randomness bakes one draw into the compiled "
         "graph as a constant"),
+    "AST004": (
+        "hardcoded-block-shape", "error",
+        "kernel call sites must not hard-code integer block shapes "
+        "(block_n/block_q/block_k/block_rows) — blocks resolve through "
+        "layout.tile_policy() and the autotune cache; TilePolicy "
+        "constructors (the defaults themselves) are exempt"),
 }
 
 

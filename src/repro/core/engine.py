@@ -54,6 +54,7 @@ h* = f(r*) forever) drives the same engine.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import os
@@ -331,6 +332,19 @@ class EngineConfig:
     dependency on the current chunk's matmul and the scheduler can overlap
     them.  Chunk order and accumulation math are unchanged — results are
     bit-identical to the synchronous scan.
+
+    ``autotune=True`` (requires ``use_kernel=True``) resolves kernel
+    block shapes from the autotuner's winner cache
+    (``repro.kernels.autotune``): every fit driver runs inside an
+    ``autotune.tuning(autotune.default_cache())`` scope, so the
+    dispatched ops consult the cache keyed by (op, backend, device kind,
+    shape bucket).  No cache installed (``set_default_cache`` /
+    ``REPRO_AUTOTUNE_CACHE``) → the hand-picked ``TilePolicy`` defaults,
+    bit-for-bit.  The flag is part of this static config, so tuned and
+    untuned fits never share a trace; swapping caches mid-process needs
+    ``jax.clear_caches()``.  Tuned blocks regroup fp32 accumulation but
+    compute the same update, so stop iterations match the untuned run
+    (gated in CI's autotune-smoke job).
     """
     max_iters: int = 300
     h_star: float = 0.0
@@ -350,6 +364,7 @@ class EngineConfig:
     stats_compression: str = "none"     # "none" | "int8_ef" sweep reductions
     stats_axis_size: int = 0        # ring size; sharded drivers resolve it
     prefetch: bool = False          # double-buffer the streaming chunk scan
+    autotune: bool = False          # kernel blocks from the autotune cache
 
     def __post_init__(self):
         # CI hook: REPRO_FORCE_KERNEL_BACKEND=<backend> reroutes every
@@ -371,6 +386,11 @@ class EngineConfig:
             raise ValueError(
                 "kernel_backend has no effect with use_kernel=False — "
                 "pass use_kernel=True (CLI: --use-kernel) or drop it")
+        if self.autotune and not self.use_kernel:
+            raise ValueError(
+                "autotune=True resolves kernel block shapes, but "
+                "use_kernel=False never dispatches a kernel — pass "
+                "use_kernel=True (CLI: --use-kernel) or drop it")
         if self.use_kernel and self.kernel_backend in (None, "auto"):
             # resolve eagerly: the concrete backend becomes part of this
             # static (hashable) config, so the jit caches keyed on it can
@@ -1246,14 +1266,27 @@ class ClusteringEngine:
         return jax.tree.map(lambda *leaves: jnp.stack(leaves), *inits)
 
     # -- drivers -----------------------------------------------------------
+    def _tuning(self):
+        """Autotune-cache scope for the drivers: active when
+        ``config.autotune``, a no-op otherwise (and when no cache is
+        installed — defaults stay bit-for-bit).  Entered around the
+        driver *call*, which is where tracing resolves block shapes."""
+        if not self.config.autotune:
+            return contextlib.nullcontext()
+        from repro.kernels import autotune as _autotune
+        return _autotune.tuning(_autotune.default_cache())
+
     def step(self, x, params):
         """One iteration → (new_params, labels, objective)."""
-        return _step(jnp.asarray(x), params, self.algorithm, self.config)
+        with self._tuning():
+            return _step(jnp.asarray(x), params, self.algorithm, self.config)
 
     def fit(self, x, params0, h_star=None) -> EngineResult:
         hs = self.config.h_star if h_star is None else h_star
-        return _fit(jnp.asarray(x), params0, jnp.asarray(hs, jnp.float32),
-                    self.algorithm, self.config)
+        with self._tuning():
+            return _fit(jnp.asarray(x), params0,
+                        jnp.asarray(hs, jnp.float32),
+                        self.algorithm, self.config)
 
     def fit_restarts(self, x, params0=None, *, key=None, k=None,
                      restarts=None, h_star=None) -> RestartResult:
@@ -1266,8 +1299,9 @@ class ClusteringEngine:
                     "fit_restarts needs params0 or (key, k, restarts)")
             params0 = self.init_restarts(key, x, k, restarts)
         hs = self.config.h_star if h_star is None else h_star
-        return _fit_restarts(x, params0, jnp.asarray(hs, jnp.float32),
-                             self.algorithm, self.config)
+        with self._tuning():
+            return _fit_restarts(x, params0, jnp.asarray(hs, jnp.float32),
+                                 self.algorithm, self.config)
 
     # -- sharded drivers (shard_map over the mesh's data axes) -------------
     def _sharded_setup(self, x, mesh):
@@ -1364,7 +1398,8 @@ class ClusteringEngine:
         """
         prog = self.sharded_fit_callable(x, params0, mesh, h_star)
         mask = prog.args[1]
-        res = prog.fn(*prog.args)
+        with self._tuning():
+            res = prog.fn(*prog.args)
         return res._replace(labels=self._strip_chunk_padding(res.labels,
                                                              mask))
 
@@ -1418,6 +1453,7 @@ class ClusteringEngine:
         prog = self.sharded_restarts_callable(
             x, params0, mesh, key=key, k=k, restarts=restarts, h_star=h_star)
         mask = prog.args[1]
-        rr = prog.fn(*prog.args)
+        with self._tuning():
+            rr = prog.fn(*prog.args)
         return rr._replace(best=rr.best._replace(
             labels=self._strip_chunk_padding(rr.best.labels, mask)))

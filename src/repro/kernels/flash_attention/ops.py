@@ -21,7 +21,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import dispatch, layout
+from repro.kernels import autotune, dispatch, layout
 from repro.kernels.layout import round_up
 
 from .kernel import flash_attention_kernel
@@ -69,13 +69,24 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
                     block_k: int | None = None,
                     backend: str | None = None,
                     interpret: bool | None = None):
-    """Flash attention with GQA: q [B,Hq,S,dh], k/v [B,Hkv,S,dh]."""
+    """Flash attention with GQA: q [B,Hq,S,dh], k/v [B,Hkv,S,dh].
+
+    Block resolution mirrors the clustering ops: explicit ``block_q`` /
+    ``block_k`` win; else an active autotune cache
+    (``kernels.autotune.tuning`` scope) supplies the tuned pair for this
+    (backend, Sq, Skv, dh) cell; else the hand-picked 128×128 default —
+    all capped to the aligned sequence lengths as before.
+    """
     b = dispatch.resolve_backend(backend, interpret)
     pol = layout.tile_policy(b)
     if scale is None:
         scale = q.shape[-1] ** -0.5
-    bq = block_q if block_q is not None else 128
-    bk = block_k if block_k is not None else 128
+    tuned = None
+    if block_q is None and block_k is None:
+        tuned = autotune.tuned_blocks(
+            "flash_attention", b, n=q.shape[2], k=k.shape[2], d=q.shape[3])
+    bq = block_q if block_q is not None else (tuned or {}).get("block_q", 128)
+    bk = block_k if block_k is not None else (tuned or {}).get("block_k", 128)
     bq = min(bq, round_up(q.shape[2], pol.row_align))
     bk = min(bk, round_up(k.shape[2], pol.row_align))
     _, fn = OP.impl(b)

@@ -16,7 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import dispatch, layout
+from repro.kernels import autotune, dispatch, layout
 
 from .kernel import gmm_estep_kernel
 
@@ -117,10 +117,19 @@ def gmm_estep(x, means, var, log_w, *, mask=None, block_n: int | None = None,
 
     Accepts a leading restart axis on the parameters (and ``x``/``mask``)
     and composes with ``jax.vmap``; see the module docstring.
+
+    Block resolution mirrors ``kmeans_assign``: explicit ``block_n`` >
+    active autotune cache (``kernels.autotune.tuning`` scope) >
+    ``TilePolicy`` default — always ``block_for``-aligned.
     """
     b = dispatch.resolve_backend(backend, interpret)
     pol = layout.tile_policy(b)
     n = x.shape[-2]
+    if block_n is None:
+        tuned = autotune.tuned_blocks(
+            "gmm_estep", b, n=n, k=means.shape[-2], d=x.shape[-1])
+        if tuned:
+            block_n = tuned.get("block_n")
     bn = pol.block_for(n, block_n)
     w = (jnp.ones(x.shape[:-1], jnp.float32) if mask is None
          else jnp.asarray(mask, jnp.float32))

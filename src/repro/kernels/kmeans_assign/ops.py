@@ -32,7 +32,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import dispatch, layout
+from repro.kernels import autotune, dispatch, layout
 from repro.kernels.layout import chunk_bounds  # noqa: F401  (historical home)
 
 from .kernel import kmeans_assign_kernel
@@ -121,10 +121,22 @@ def kmeans_assign(x, centroids, *, mask=None, block_n: int | None = None,
     Accepts a leading restart axis on ``centroids`` (and ``x``/``mask``)
     and composes with ``jax.vmap``; see the module docstring for the
     backend registry and ``mask`` contract.
+
+    Block resolution: an explicit ``block_n`` always wins; otherwise an
+    active autotune cache (``kernels.autotune.tuning`` scope — what
+    ``EngineConfig(autotune=True)`` enters) supplies the tuned block for
+    this (backend, shape) cell; with neither, the backend's hand-picked
+    ``TilePolicy`` default applies, bit-for-bit as before.  Either way
+    the block passes through ``TilePolicy.block_for`` alignment.
     """
     b = dispatch.resolve_backend(backend, interpret)
     pol = layout.tile_policy(b)
     n = x.shape[-2]
+    if block_n is None:
+        tuned = autotune.tuned_blocks(
+            "kmeans_assign", b, n=n, k=centroids.shape[-2], d=x.shape[-1])
+        if tuned:
+            block_n = tuned.get("block_n")
     bn = pol.block_for(n, block_n)
     w = (jnp.ones(x.shape[:-1], jnp.float32) if mask is None
          else jnp.asarray(mask, jnp.float32))

@@ -103,19 +103,31 @@ DEFAULT_BUCKETS = (256, 1024, 4096, 16384)
 
 
 def bucket_for(n: int, buckets=DEFAULT_BUCKETS) -> int:
-    """Smallest bucket that holds ``n`` rows.
+    """Smallest padded size in the bucket ladder that holds ``n`` rows.
 
     The serving layer pads every drained request batch up to a bucket so
     XLA sees a closed set of shapes — one compiled program per (model,
-    bucket) instead of one per arriving batch size.  Requests larger than
-    the largest bucket are rejected at admission (the queue never reaches
-    here with one).
+    bucket) instead of one per arriving batch size.
+
+    Contract (ISSUE 9): within the ladder, the smallest bucket ≥ n wins;
+    **above the largest bucket the ladder continues in multiples of that
+    bucket** (⌈n/B⌉·B for B = ``buckets[-1]``), so the shape set stays
+    closed and countable at any n instead of failing implicitly.  Callers
+    that must bound admitted sizes (the serving queue) enforce their own
+    cap *before* bucketing — ``ClusterServer`` rejects oversize batches at
+    admission.  Padding that is impossible fails loud: ``n < 1`` (nothing
+    to pad) or an empty ``buckets`` ladder raise ``ValueError``.
     """
+    if not buckets:
+        raise ValueError("bucket_for needs a non-empty bucket ladder — "
+                         "padding to a bucket is impossible without one")
+    if n < 1:
+        raise ValueError(f"cannot pad a batch of {n} rows to a bucket — "
+                         "batches must have at least one row")
     for b in buckets:
         if n <= b:
             return b
-    raise ValueError(f"batch of {n} rows exceeds the largest bucket "
-                     f"{buckets[-1]}; admission should have rejected it")
+    return round_up(n, buckets[-1])
 
 
 def pad_to_bucket(x, bucket: int):

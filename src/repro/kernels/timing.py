@@ -1,0 +1,54 @@
+"""One timing methodology for every committed number (ISSUE 9).
+
+``benchmarks/run.py``, ``benchmarks/sharded_overlap_worker.py`` and the
+kernel autotuner used to carry their own warm-then-loop timing snippets;
+this module is the single copy.  The contract:
+
+  · **warmup** calls first (default 1) — the jit compile and any lazy
+    initialisation happen outside the timed region;
+  · every timed call is bracketed by ``jax.block_until_ready`` on its
+    result, so async dispatch never hides device time;
+  · **reps** samples reduced to one number — ``"median"`` by default
+    (robust to one-off scheduler hiccups), ``"min"`` for the
+    CPU-substrate benches where host scheduling noise dominates and the
+    floor is the signal, ``"mean"`` when you want the average.
+
+``timer`` is injectable (defaults to ``time.perf_counter``) so tests can
+drive winner selection with a deterministic fake clock.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import jax
+
+REDUCERS = {
+    "median": statistics.median,
+    "min": min,
+    "mean": statistics.fmean,
+}
+
+
+def time_callable(fn, *args, reps: int = 5, warmup: int = 1,
+                  reduce: str = "median", timer=None) -> float:
+    """Seconds per call of ``fn(*args)`` under the shared methodology.
+
+    Runs ``warmup`` untimed calls, then ``reps`` timed calls — each one
+    ``jax.block_until_ready``-bracketed — and reduces the samples with
+    ``reduce`` ("median" | "min" | "mean").
+    """
+    if reduce not in REDUCERS:
+        raise ValueError(f"unknown reduce {reduce!r}; choose one of "
+                         f"{sorted(REDUCERS)}")
+    if reps < 1:
+        raise ValueError(f"reps must be >= 1; got {reps}")
+    clock = time.perf_counter if timer is None else timer
+    for _ in range(max(0, warmup)):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(reps):
+        t0 = clock()
+        jax.block_until_ready(fn(*args))
+        samples.append(clock() - t0)
+    return float(REDUCERS[reduce](samples))

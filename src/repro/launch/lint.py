@@ -10,7 +10,7 @@ def _parse_args(argv=None):
         description="Graph-contract linter: statically verify collective, "
                     "dtype, transfer and recompile invariants across every "
                     "engine configuration (rules GC001-GC006), plus the "
-                    "repo's AST-level source contracts (AST001-AST003).")
+                    "repo's AST-level source contracts (AST001-AST004).")
     ap.add_argument("--rules", default=None,
                     help="comma-separated rule ids or names to run "
                          "(default: all); e.g. GC001,GC005 or "
@@ -58,7 +58,7 @@ def main(argv=None) -> int:
 
     rules = sorted(normalize_rule_ids(_split(args.rules))) if args.rules \
         else sorted(engine_contracts.GRAPH_RULES) + \
-        ["AST001", "AST002", "AST003"]
+        ["AST001", "AST002", "AST003", "AST004"]
 
     graph_rules = [r for r in rules if r.startswith("GC")]
     report = engine_contracts.run_graph_lint(

@@ -217,6 +217,32 @@ def test_ast_rules_fire_and_suppress():
     assert flagged[0].endswith(":14")
 
 
+BLOCK_SRC = '''
+from repro.kernels.kmeans_assign.ops import kmeans_assign
+from repro.kernels.layout import TilePolicy
+
+POLICY = TilePolicy(block_rows=512, row_align=8, k_align=8, d_align=128)
+
+def tuned(x, c):
+    return kmeans_assign(x, c, block_n=256)
+
+def waived(x, c):
+    return kmeans_assign(x, c, block_n=256)  # repro-lint: disable=AST004
+
+def resolved(x, c, bn):
+    return kmeans_assign(x, c, block_n=bn)
+'''
+
+
+def test_ast004_flags_hardcoded_block_shapes():
+    findings = ast_rules.check_source(BLOCK_SRC, "repro/somewhere.py")
+    hits = [f for f in findings if f.rule == "AST004"]
+    # the literal fires; the waived call, the variable-resolved call and
+    # the TilePolicy constructor (the defaults themselves) stay quiet
+    assert len(hits) == 1 and hits[0].where.endswith(":8"), findings
+    assert "block_n=256" in hits[0].message
+
+
 def test_ast001_exempt_without_x_leading_param():
     src = "def flash_attention(q, k, v, *, causal=True):\n    return q\n"
     assert ast_rules.check_source(
@@ -232,7 +258,7 @@ def test_ast_rules_clean_on_tree():
 
 def test_rule_catalogue_covers_all_findings():
     assert set(engine_contracts.GRAPH_RULES) <= set(RULE_CATALOGUE)
-    assert {"AST001", "AST002", "AST003"} <= set(RULE_CATALOGUE)
+    assert {"AST001", "AST002", "AST003", "AST004"} <= set(RULE_CATALOGUE)
 
 
 def test_suppression_controls_exit_decision():
