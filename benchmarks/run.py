@@ -822,6 +822,123 @@ def longtail_matched():
 
 
 # --------------------------------------------------------------------------
+# Cost-aware provisioning planner: predicted vs actual (ISSUE 10 tentpole)
+# --------------------------------------------------------------------------
+
+@bench("plan")
+def plan_bench():
+    """ISSUE 10: planner predicted-vs-actual on the small skin config.
+
+    Fits per-mode h(r) + iteration models from harvested traces, runs the
+    planner at r* = 0.99 over the default price table and the committed
+    throughput benches, then executes the chosen plan through the real fit
+    drivers on a held-out group (``repro.launch.plan.validate_plan`` —
+    warm walls, so Eq. 10 compares steady-state compute, plus the
+    StragglerMonitor step-loop report).
+
+    Persists ``BENCH_plan.json`` at the repo root (tracked artifact).
+    Tracked claims (CI ``longtail-artifacts`` gate):
+      · ``iters_within_tolerance`` — actual stop iterations within
+        ±max(50%, 5) of predicted (host-independent, hard-gated);
+      · ``actual_cost_below_full_convergence`` — the validated run's
+        Eq. 6 cost at r* = 0.99 is strictly below the full-convergence
+        reference on the same host (the paper's §5.4 claim, executable;
+        warm same-host walls so host noise largely cancels);
+      · ``predicted_cost_fraction_below_1`` — the planner already
+        predicts that saving before running anything;
+      · ``straggler_report_present`` — the monitored step-loop evidence
+        landed (ISSUE 10 satellite: StragglerMonitor wired through
+        --validate).
+    Wall-seconds agreement is recorded but advisory: the throughput
+    points were measured on a different host class than CI.
+    """
+    import jax.numpy as jnp
+    from repro import core
+    from repro.core.cost_model import PriceTable
+    from repro.core.planner import PlanSpec, ThroughputModel
+    from repro.core.planner import plan as run_plan
+    from repro.data import load
+    from repro.launch.plan import TOLERANCE, fit_models, validate_plan
+
+    k, chunks, b, decay, max_iters, r_star = 2, 16, 4, 0.95, 200, 0.99
+    data = load("skin", n=24_000, seed=0)
+    groups = core.random_groups(data, 6_000, max_groups=3)
+    train_g, val = groups[:2], jnp.asarray(groups[2], jnp.float32)
+
+    models, ims = fit_models(train_g, algorithm="kmeans", k=k,
+                             chunks=chunks, batch_chunks=b, decay=decay,
+                             max_iters=max_iters, seed=0)
+    prices = PriceTable.default()
+    throughput = ThroughputModel.from_bench_dir()
+    spec = PlanSpec(n=24_000, d=int(data.shape[1]), k=k, target_r=r_star,
+                    deadline_s=3600.0, prices=prices, max_iters=max_iters,
+                    chunks=chunks, batch_chunks=b, decay=decay)
+    report = run_plan(spec, models=models, iteration_models=ims,
+                      throughput=throughput)
+    record = validate_plan(report, val, algorithm="kmeans", k=k,
+                           models=models, throughput=throughput,
+                           prices=prices, target_r=r_star,
+                           max_iters=max_iters)
+
+    chosen = report.chosen
+    claims = {
+        "iters_within_tolerance": bool(record["iters_within_tolerance"]),
+        "actual_cost_below_full_convergence":
+            bool(record["cost_fraction_actual"] < 1.0),
+        "predicted_cost_fraction_below_1":
+            bool(report.cost_fraction < 1.0),
+        "straggler_report_present":
+            bool(record["straggler"].get("steps", 0) > 0),
+    }
+    rows = [{
+        "name": "plan_rstar0.99", "chosen": chosen.describe(),
+        "predicted_iters": record["predicted"]["iters"],
+        "actual_iters": record["actual"]["iters"],
+        "predicted_cost_usd": f"{record['predicted']['cost_usd']:.3e}",
+        "actual_cost_usd": f"{record['actual']['cost_usd']:.3e}",
+        "cost_fraction_predicted": round(report.cost_fraction, 4),
+        "cost_fraction_actual": round(record["cost_fraction_actual"], 4),
+        "accuracy": round(record["actual"]["accuracy"], 4),
+        "straggler_flagged": record["straggler"].get("flagged", 0),
+    }]
+    payload = {
+        "benchmark": "plan",
+        "dataset": "skin", "k": k, "n": 24_000, "group_size": 6_000,
+        "train_groups": 2,
+        "target_r": r_star, "deadline_s": 3600.0,
+        "engine": {"chunks": chunks, "batch_chunks": b, "decay": decay,
+                   "max_iters": max_iters},
+        "price_table": [p.name for p in prices.prices],
+        "h_star_by_mode": report.h_star_by_mode,
+        "chosen": {
+            "candidate": chosen.describe(),
+            "engine_kwargs": chosen.engine_kwargs(),
+            "predicted_iters": chosen.predicted_iters,
+            "predicted_wall_s": chosen.predicted_wall_s,
+            "predicted_cost_usd": chosen.predicted_cost_usd,
+        },
+        "cost_fraction_predicted": report.cost_fraction,
+        "full_reference": report.full_reference,
+        "tolerance": TOLERANCE,
+        "validation": record,
+        "claims": claims,
+        "note": "validation walls are warm (second call of an identical "
+                "jit program) so Eq. 10 compares steady-state compute; "
+                "wall-seconds agreement with the cross-host throughput "
+                "points is advisory, iteration and same-host cost-"
+                "fraction claims are the CI gate",
+        "rows": rows,
+    }
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_plan.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return rows
+
+
+# --------------------------------------------------------------------------
 # Clustering-as-a-service: the assignment server (ISSUE 6 tentpole)
 # --------------------------------------------------------------------------
 

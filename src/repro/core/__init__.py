@@ -25,4 +25,8 @@ from .engine import (ClusteringEngine, EngineConfig, EngineResult,
 from .artifacts import ClusterArtifact, fingerprint_key, load_registry_dir
 from .sampling import GroupedData, random_groups, kfold_split, make_grouped
 from .cost_model import (CostReport, report, landuse_case_study,
-                         EC2_ON_DEMAND_USD_PER_HOUR, TPU_ON_DEMAND_USD_PER_HOUR)
+                         EC2_ON_DEMAND_USD_PER_HOUR, TPU_ON_DEMAND_USD_PER_HOUR,
+                         Price, PriceTable, expected_spot_wall_s,
+                         priced_wall_s, candidate_cost_usd)
+from .planner import (IterationModel, ThroughputModel, ThroughputPoint,
+                      PlanSpec, CandidatePlan, PlanReport, PlanError, plan)

@@ -1,13 +1,31 @@
-"""Cloud cost model (paper §3.3, Eq. 6/9/10) + the land-use case study (§5.4).
+"""Cloud cost model (paper §3.3, Eq. 6/9/10) + the land-use case study (§5.4)
++ the spot-market extension the provisioning planner prices candidates with.
 
-On-demand model: Cost = Price_unit × Time_comp,
-Time_comp = Time_train + Time_actual, cost-effectiveness = T_actual / T_full.
-Unit prices follow the paper's Amazon EC2 references; TPU v5e pricing is
-added for the framework's own deployment target (beyond-paper, flagged).
+Paper equations implemented here (each property/function below names the one
+it computes):
+
+  · Eq. 6 — ``Cost = Price_unit × N_instances × Time_comp``: the on-demand
+    billing model (``CostReport.cost_actual_usd`` / ``cost_full_usd``).
+  · Eq. 9 — ``Time_comp = Time_train + Time_actual``: the one-off training
+    phase (fitting h(r)) is amortised into the first run's bill
+    (``CostReport.time_comp_s``).
+  · Eq. 10 — ``cost-effectiveness = Time_actual / Time_full``: the fraction
+    of the full-convergence cost the early-stopped run pays
+    (``CostReport.cost_effectiveness``; the paper's headline 47.71–71.14%
+    for k-means and 16.69–32.04% for EM at 99% accuracy).
+
+Beyond-paper extension (flagged throughout): spot-market pricing.  The paper
+prices on-demand m5.large instances only; the provisioning planner
+(``repro.core.planner``) also considers preemptible capacity, which needs a
+price *pair* per instance type plus an expected-restart model —
+``Price`` / ``PriceTable`` / ``expected_spot_wall_s``.  Unit prices follow
+the paper's Amazon EC2 references; TPU v5e/v5p pricing is added for the
+framework's own deployment target.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 
 # $/hour, on-demand (paper's references: m5.large for the case study,
 # m4.2xlarge for the 50-instance illustration in §1).
@@ -26,6 +44,8 @@ TPU_ON_DEMAND_USD_PER_HOUR = {
 
 @dataclasses.dataclass(frozen=True)
 class CostReport:
+    """Eq. 6/9/10 for one (early-stopped run, full-convergence baseline)
+    pair: the paper's unit of cost accounting (§3.3, §5.4)."""
     time_train_s: float
     time_actual_s: float
     time_full_s: float
@@ -33,38 +53,221 @@ class CostReport:
     n_instances: int = 1
 
     @property
-    def time_comp_s(self) -> float:           # Eq. 9
+    def time_comp_s(self) -> float:
+        """Eq. 9 — billed time: the amortised training phase plus the
+        early-stopped production run."""
         return self.time_train_s + self.time_actual_s
 
     @property
-    def cost_effectiveness(self) -> float:    # Eq. 10 (lower = better)
+    def cost_effectiveness(self) -> float:
+        """Eq. 10 — Time_actual / Time_full (lower = better; 1.0 means the
+        early stop saved nothing)."""
         return self.time_actual_s / self.time_full_s
 
     @property
-    def cost_actual_usd(self) -> float:       # Eq. 6
+    def cost_actual_usd(self) -> float:
+        """Eq. 6 — Price_unit × N_instances × Time_comp for the
+        early-stopped run (training amortised in, per Eq. 9)."""
         return self.unit_price_per_hour * self.n_instances * self.time_comp_s / 3600.0
 
     @property
     def cost_full_usd(self) -> float:
+        """Eq. 6 applied to the full-convergence baseline (no training
+        term: the reference run needs no fitted threshold)."""
         return self.unit_price_per_hour * self.n_instances * self.time_full_s / 3600.0
 
     @property
     def savings_usd(self) -> float:
+        """cost_full − cost_actual: the dollars the long-tail cut saved
+        (§5.4 reports this for the land-use case study)."""
         return self.cost_full_usd - self.cost_actual_usd
 
     @property
     def cost_train_usd(self) -> float:
+        """Eq. 6 applied to the training phase alone — the one-off
+        investment Eq. 9 amortises over repeated production use."""
         return self.unit_price_per_hour * self.n_instances * self.time_train_s / 3600.0
 
 
 def report(time_actual_s: float, time_full_s: float, *, time_train_s: float = 0.0,
            instance: str = "m5.large", n_instances: int = 1,
            price_table: dict | None = None) -> CostReport:
+    """Build the Eq. 6/9/10 report for a measured (actual, full) time pair.
+
+    ``price_table`` maps instance name → on-demand $/h and defaults to the
+    paper's EC2 references (``EC2_ON_DEMAND_USD_PER_HOUR``).
+    """
     table = price_table or EC2_ON_DEMAND_USD_PER_HOUR
     return CostReport(time_train_s=time_train_s, time_actual_s=time_actual_s,
                       time_full_s=time_full_s,
                       unit_price_per_hour=table[instance],
                       n_instances=n_instances)
+
+
+# --------------------------------------------------------------------------
+# Spot-market price pairs + expected-restart model (beyond-paper: what the
+# provisioning planner needs — see repro.core.planner and DV-ARPA in
+# PAPERS.md for the pricing-aware provisioning direction)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Price:
+    """One instance/accelerator quote: the paper's Eq. 6 unit price plus an
+    optional spot quote with its interruption rate.
+
+    ``preemption_per_hour`` is the expected number of interruptions per
+    instance-hour (cloud providers publish interruption *frequencies*;
+    0.05/h ≈ the "<5% per hour" band).  ``spot_per_hour=None`` means no
+    preemptible capacity exists for this type (TPU pods, reserved metal).
+    """
+    name: str
+    on_demand_per_hour: float
+    spot_per_hour: float | None = None
+    preemption_per_hour: float = 0.0
+
+    def __post_init__(self):
+        if self.on_demand_per_hour <= 0:
+            raise ValueError(
+                f"price {self.name!r}: on_demand_per_hour must be > 0, got "
+                f"{self.on_demand_per_hour}")
+        if self.spot_per_hour is not None and self.spot_per_hour <= 0:
+            raise ValueError(
+                f"price {self.name!r}: spot_per_hour must be > 0 (or None "
+                f"for no spot capacity), got {self.spot_per_hour}")
+        if self.preemption_per_hour < 0:
+            raise ValueError(
+                f"price {self.name!r}: preemption_per_hour must be >= 0, "
+                f"got {self.preemption_per_hour}")
+
+    @property
+    def pricings(self) -> tuple[str, ...]:
+        return (("on_demand", "spot") if self.spot_per_hour is not None
+                else ("on_demand",))
+
+    def rate(self, pricing: str) -> float:
+        if pricing == "on_demand":
+            return self.on_demand_per_hour
+        if pricing == "spot":
+            if self.spot_per_hour is None:
+                raise ValueError(f"{self.name!r} has no spot quote")
+            return self.spot_per_hour
+        raise ValueError(f"unknown pricing {pricing!r} "
+                         "(expected 'on_demand' or 'spot')")
+
+
+@dataclasses.dataclass(frozen=True)
+class PriceTable:
+    """The planner's market view: a tuple of :class:`Price` quotes.
+
+    JSON format (``from_json`` / ``plan --prices table.json``)::
+
+        [{"name": "m5.large", "on_demand_per_hour": 0.096,
+          "spot_per_hour": 0.035, "preemption_per_hour": 0.05}, ...]
+
+    An empty table is constructible (so partial configs can be built up)
+    but the planner rejects it loudly — there is nothing to choose from.
+    """
+    prices: tuple[Price, ...] = ()
+
+    def __post_init__(self):
+        names = [p.name for p in self.prices]
+        dupes = {n for n in names if names.count(n) > 1}
+        if dupes:
+            raise ValueError(f"duplicate price entries: {sorted(dupes)}")
+
+    def __len__(self):
+        return len(self.prices)
+
+    def get(self, name: str) -> Price:
+        for p in self.prices:
+            if p.name == name:
+                return p
+        raise KeyError(f"no price entry {name!r}; table has "
+                       f"{[p.name for p in self.prices]}")
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(p.name for p in self.prices)
+
+    @classmethod
+    def default(cls) -> "PriceTable":
+        """The paper's EC2 on-demand references + the TPU deployment
+        targets, with representative spot quotes (~30% of on-demand at a
+        5%/h interruption band — the planner's spot-vs-on-demand crossover
+        tests sweep the rate, so these are starting points, not claims)."""
+        rows = [Price(n, od, round(od * 0.30, 4), 0.05)
+                for n, od in EC2_ON_DEMAND_USD_PER_HOUR.items()]
+        rows += [Price(n, od, round(od * 0.40, 4), 0.08)
+                 for n, od in TPU_ON_DEMAND_USD_PER_HOUR.items()]
+        return cls(tuple(rows))
+
+    @classmethod
+    def from_json(cls, text: str) -> "PriceTable":
+        rows = json.loads(text)
+        if not isinstance(rows, list):
+            raise ValueError("price table JSON must be a list of objects "
+                             "(see PriceTable.from_json docstring)")
+        return cls(tuple(Price(**r) for r in rows))
+
+    def to_json(self) -> str:
+        return json.dumps([dataclasses.asdict(p) for p in self.prices],
+                          indent=1)
+
+
+def expected_spot_wall_s(wall_s: float, preemption_per_hour: float,
+                         n_instances: int, *,
+                         restart_overhead_s: float = 60.0,
+                         checkpoint_interval_s: float | None = None) -> float:
+    """Expected wall clock of a synchronous fleet on preemptible capacity.
+
+    A synchronous fit stalls when ANY instance is interrupted, so the fleet
+    interruption rate is ``λ = preemption_per_hour × n_instances`` (events/
+    hour, independent-Poisson approximation).  Each interruption costs the
+    restart overhead (re-provision + reload) plus the work since the last
+    checkpoint — ``checkpoint_interval_s / 2`` in expectation, or half the
+    run itself when nothing checkpoints (``None``, the conservative
+    default: the engine's fit is one device loop today; per-iteration
+    checkpointing is the ROADMAP's elastic-fleet item).  First-order in
+    λT (interruptions are rare within one clustering run):
+
+        E[T] ≈ T + λ·T_h × (restart_overhead + lost_work/2)
+
+    Monotonically increasing in ``preemption_per_hour``, ``n_instances``
+    and ``wall_s`` — the planner's spot-vs-on-demand crossover relies on
+    this (tested in ``tests/test_planner.py``).
+    """
+    if wall_s < 0:
+        raise ValueError(f"wall_s must be >= 0, got {wall_s}")
+    lam = preemption_per_hour * max(n_instances, 1)   # fleet events/hour
+    expected_events = lam * wall_s / 3600.0
+    lost = (wall_s if checkpoint_interval_s is None
+            else min(checkpoint_interval_s, wall_s))
+    return wall_s + expected_events * (restart_overhead_s + lost / 2.0)
+
+
+def priced_wall_s(wall_s: float, price: Price, n_instances: int,
+                  pricing: str, *, restart_overhead_s: float = 60.0,
+                  checkpoint_interval_s: float | None = None) -> float:
+    """The wall clock a candidate is billed (and deadlined) at: the raw
+    predicted wall on on-demand, the expected-restart-inflated wall on
+    spot."""
+    if pricing == "spot":
+        return expected_spot_wall_s(
+            wall_s, price.preemption_per_hour, n_instances,
+            restart_overhead_s=restart_overhead_s,
+            checkpoint_interval_s=checkpoint_interval_s)
+    return wall_s
+
+
+def candidate_cost_usd(wall_s: float, price: Price, n_instances: int,
+                       pricing: str, *, restart_overhead_s: float = 60.0,
+                       checkpoint_interval_s: float | None = None) -> float:
+    """Eq. 6 priced at the chosen market: unit rate × instances × billed
+    wall (expected-restart-inflated for spot — interrupted hours are still
+    billed up to the interruption)."""
+    billed = priced_wall_s(wall_s, price, n_instances, pricing,
+                           restart_overhead_s=restart_overhead_s,
+                           checkpoint_interval_s=checkpoint_interval_s)
+    return price.rate(pricing) * n_instances * billed / 3600.0
 
 
 # --------------------------------------------------------------------------
@@ -78,6 +281,8 @@ US_AREA_KM2 = 9_833_520.0
 
 
 def n_images_for_area(area_km2: float) -> float:
+    """§5.4 scaling: images needed to tile ``area_km2`` at the case
+    study's partition size (438×406 px at 1 ft/px = 16,520.74 m²)."""
     return area_km2 * 1e6 / IMAGE_AREA_M2
 
 
@@ -85,11 +290,14 @@ def landuse_case_study(time_full_per_image_s: float, cost_effectiveness: float,
                        *, area_km2: float = CALIFORNIA_AREA_KM2,
                        time_train_s: float = 1169.46,
                        instance: str = "m5.large") -> CostReport:
-    """Scale a per-image full-convergence time to a land-use statistics run.
+    """Scale a per-image full-convergence time to a land-use statistics run
+    (§5.4), applying Eq. 9/10 at survey scale.
 
     Paper numbers for reference: California ≈ 2.567e7 images, training took
     1169.46 s (once), 99%-accuracy clustering saved ≈19,256.73 h ≈ $4,082.43
     on m5.large; the US-wide run saves up to $94,687.49 per use.
+    ``docs/cost_planning.md`` walks this calculation and hands it to the
+    provisioning planner.
     """
     n_img = n_images_for_area(area_km2)
     time_full = n_img * time_full_per_image_s

@@ -1,8 +1,11 @@
 """The paper's contribution as a reusable control layer.
 
 ``LongTailModel`` packages the offline-trained regression:  set a desired
-accuracy r*, get the change-rate threshold h* = f(r*), and stop the iterative
-process the first time  h_i = |J_i − J_{i−1}|/|J_{i−1}| ≤ h*  (§4).
+accuracy r*, get the change-rate threshold h* = f(r*) (the fitted Eq. 8
+curve), and stop the iterative process the first time
+h_i = |J_i − J_{i−1}|/|J_{i−1}| ≤ h*  (Eq. 7, §4).  The dollars that stop
+saves are accounted by ``cost_model`` (Eq. 6/9/10); the provisioning
+planner (``core.planner``) turns h* into a predicted stop iteration.
 
 Two consumers:
   · the distributed clustering engine — the predicate runs **on device**
@@ -47,6 +50,8 @@ class LongTailModel:
     engine_config: dict | None = None   # harvest-regime provenance
 
     def threshold_for(self, desired_accuracy: float) -> float:
+        """h* = f(r*) — evaluate the fitted Eq. 8 regression at the
+        desired accuracy (§4: the one number reused forever)."""
         return self.regression.threshold_for(desired_accuracy)
 
     # ---- persistence (tiny JSON artifacts, checkpointed with the run) ----
@@ -84,9 +89,11 @@ def fit_longtail(traces: Sequence[tuple[np.ndarray, np.ndarray]], *,
                  algorithm: str, dataset: str, family: str | None = None,
                  balanced: bool = False,
                  engine_config: dict | None = None) -> LongTailModel:
-    """Pool (r, h) traces from the training groups and fit the regression.
+    """Pool (r, h) traces from the training groups and fit h = f(r) —
+    the Eq. 8 regression (§4, training phase).
 
-    ``family=None`` runs the paper's model-selection comparison and keeps the
+    ``family=None`` runs the paper's Eq. 8 model-selection comparison
+    (linear/quadratic/exponential/…, lowest fit error wins) and keeps the
     winner; passing e.g. ``"quadratic"`` pins the paper's default.
     ``balanced=True`` applies the r-binned geometric-mean aggregation before
     fitting (beyond-paper robustification — see regression.balance_cloud).

@@ -1,0 +1,604 @@
+"""Cost-aware provisioning planner — the decision layer over Eq. 6/9/10.
+
+The paper proves the long tail is not worth paying for (99% accuracy at
+47.71–71.14% of the k-means full-convergence cost, 16.69–32.04% for EM) but
+leaves the *decision* to the reader: which engine configuration, on how many
+instances, at which market price, actually minimises the bill for a target
+accuracy under a deadline?  This module closes that loop — the
+D-SPACE4Cloud direction in PAPERS.md (performance-model-driven capacity
+planning) stacked on the paper's own h(r) model, with DV-ARPA's
+pricing-aware provisioning as the spot-market extension:
+
+  · **iterations** come from the fitted mode-matched h(r) model
+    (``repro.core.longtail_train``): h* = f(r*) per candidate mode, pushed
+    through an :class:`IterationModel` — a geometric-decay fit of the
+    harvested Eq. 7 h trajectory (h_i ≈ h₀·ρⁱ), with the paired-h noise
+    floor recorded so thresholds the mode cannot certify predict
+    ``max_iters`` instead of a fantasy early stop;
+
+  · **wall time** comes from measured per-iteration throughput
+    interpolated off the committed ``BENCH_*.json`` trajectory
+    (minibatch_shard, kernel_backends, sharded_overlap, roofline) — see
+    :class:`ThroughputModel` for the (N, devices) interpolation contract;
+
+  · **dollars** come from the extended cost model
+    (``repro.core.cost_model``): on-demand + spot price pairs, with spot
+    walls inflated by the expected-restart model before both the deadline
+    check and the Eq. 6 bill.
+
+``plan()`` enumerates the candidate space (mode × devices × compression ×
+prefetch × instance × pricing), drops candidates that miss the deadline,
+and returns a :class:`PlanReport` — the cheapest feasible
+:class:`CandidatePlan` (directly convertible to ``EngineConfig`` kwargs),
+the runner-up table, and the full-convergence reference the paper's
+cost-fraction claim is measured against.  ``repro.launch.plan`` is the CLI;
+``--validate`` executes the chosen plan through the real fit drivers and
+``BENCH_plan.json`` gates predicted-vs-actual in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import math
+import os
+from typing import Sequence
+
+import numpy as np
+
+from .cost_model import PriceTable, candidate_cost_usd, priced_wall_s
+
+
+class PlanError(ValueError):
+    """The planner cannot emit a plan; the message names the binding
+    constraint (empty price table, deadline infeasibility with the fastest
+    candidate's wall, or missing throughput coverage)."""
+
+
+# --------------------------------------------------------------------------
+# Iteration prediction: geometric tail fit of the harvested h trajectory
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IterationModel:
+    """Predicted stop iteration as a function of the Eq. 7 threshold h*.
+
+    Fit from harvested traces (the same ones the h(r) regression pools):
+    the long tail is near-geometric, ``h_i ≈ h0 · rho^i``, so the first
+    iteration with h ≤ h* is ``log(h*/h0) / log(rho)``.  Two guard rails:
+
+      · ``h_floor`` — the observed noise floor of the h signal (median of
+        each trace's final quartile).  Minibatch paired h plateaus at a
+        positive floor; an h* at or below it never fires and the fit runs
+        to ``max_iters`` (exactly the behaviour
+        ``BENCH_longtail_matched.json`` records at r* = 0.99), so the
+        predictor says so instead of extrapolating the decay through the
+        plateau.
+      · ``n_full`` — the observed full-convergence iteration count (mean
+        across traces), the paper's Time_full denominator in iterations.
+    """
+    h0: float
+    rho: float
+    h_floor: float
+    n_full: int
+    n_traces: int = 1
+
+    @classmethod
+    def from_traces(cls, hs: Sequence[np.ndarray]) -> "IterationModel":
+        """Least-squares log-linear fit pooled over iteration-ordered h
+        sequences (finite, positive entries only)."""
+        xs, ys, floors, lengths = [], [], [], []
+        for h in hs:
+            h = np.asarray(h, np.float64)
+            valid = np.isfinite(h) & (h > 0)
+            idx = np.nonzero(valid)[0]
+            if idx.size == 0:
+                continue
+            lengths.append(h.shape[0])
+            xs.append(idx.astype(np.float64))
+            ys.append(np.log(h[idx]))
+            tail = h[idx][-max(1, idx.size // 4):]
+            floors.append(float(np.median(tail)))
+        if not xs:
+            raise PlanError(
+                "IterationModel.from_traces: no finite positive h values "
+                "in any trace — harvest traces with EngineConfig(trace="
+                "True) before planning")
+        x = np.concatenate(xs)
+        y = np.concatenate(ys)
+        if x.size >= 2 and np.ptp(x) > 0:
+            slope, intercept = np.polyfit(x, y, 1)
+        else:
+            slope, intercept = 0.0, float(y.mean())
+        rho = float(np.exp(min(slope, 0.0)))          # decay only
+        return cls(h0=float(np.exp(intercept)), rho=min(rho, 1.0 - 1e-9),
+                   h_floor=float(np.median(floors)),
+                   n_full=int(math.ceil(float(np.mean(lengths)))),
+                   n_traces=len(xs))
+
+    def iters_to(self, h_star: float, max_iters: int,
+                 patience: int = 1) -> int:
+        """First iteration with h ≤ h*, plus the patience window the
+        engine's stop predicate requires; clamped to [1, max_iters]."""
+        if h_star <= 0 or h_star <= self.h_floor:
+            # below the signal's noise floor the predicate never fires
+            return max_iters
+        if h_star >= self.h0:
+            n = 1
+        else:
+            n = int(math.ceil(math.log(h_star / self.h0)
+                              / math.log(self.rho)))
+        return max(1, min(n + (patience - 1), max_iters))
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# --------------------------------------------------------------------------
+# Throughput: per-iteration seconds interpolated from committed BENCH_*.json
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ThroughputPoint:
+    """One measured cell: seconds per iteration at a known touched-point
+    count (N × the mode's per-iteration touch fraction — 2·B/C under the
+    paired minibatch stop, 1 for a full sweep)."""
+    source: str
+    mode: str                       # "full" | "minibatch"
+    backend: str | None             # kernel backend; None = jnp path
+    compression: str                # "none" | "int8_ef"
+    devices: int
+    touched_points: float
+    s_per_iter: float
+
+
+def _repo_root() -> str:
+    return os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                        "..", "..", ".."))
+
+
+def load_bench_points(bench_dir: str | None = None) -> list[ThroughputPoint]:
+    """Harvest throughput points from every committed ``BENCH_*.json`` the
+    planner understands (minibatch_shard, kernel_backends, sharded_overlap;
+    roofline rows ride separately via :func:`load_roofline_points`).
+    Missing files are skipped — the planner errors only when a *query*
+    finds no coverage."""
+    root = bench_dir or _repo_root()
+    pts: list[ThroughputPoint] = []
+
+    def _load(name):
+        path = os.path.join(root, name)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+
+    mb = _load("BENCH_minibatch_shard.json")
+    if mb:
+        touched = 2.0 * mb["n"] * mb["batch_chunks"] / mb["chunks"]
+        for r in mb["rows"]:
+            pts.append(ThroughputPoint(
+                source="minibatch_shard", mode="minibatch", backend=None,
+                compression="none", devices=int(r["devices"]),
+                touched_points=touched,
+                s_per_iter=r["wall_s_fit"] / max(r["iters"], 1)))
+
+    kb = _load("BENCH_kernel_backends.json")
+    if kb:
+        frac = {"full": 1.0,
+                "minibatch": 2.0 * kb["batch_chunks"] / kb["chunks"]}
+        for r in kb["rows"]:
+            pts.append(ThroughputPoint(
+                source="kernel_backends", mode=r["mode"],
+                backend=r["backend"], compression="none",
+                devices=int(r["devices"]),
+                touched_points=kb["n"] * frac[r["mode"]],
+                s_per_iter=r["wall_s_fit"] / max(r["iters"], 1)))
+
+    ov = _load("BENCH_sharded_overlap.json")
+    if ov:
+        touched = 2.0 * ov["n"] * ov["batch_chunks"] / ov["chunks"]
+        for r in ov["rows"]:
+            if r["leg"] != "sync":       # overlap wall is advisory (flags)
+                continue
+            pts.append(ThroughputPoint(
+                source="sharded_overlap", mode="minibatch", backend=None,
+                compression=r["compression"], devices=int(r["devices"]),
+                touched_points=touched, s_per_iter=r["s_per_sweep"]))
+    return pts
+
+
+def load_roofline_points(bench_dir: str | None = None) -> list[dict]:
+    """Per-op achieved FLOP/s rows from ``BENCH_roofline.json`` — the
+    fallback when no engine-level bench covers a (mode, backend) cell
+    (e.g. a tpu/gpu backend tuned on real hardware)."""
+    root = bench_dir or _repo_root()
+    path = os.path.join(root, "BENCH_roofline.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f).get("rows", [])
+
+
+def _interp(x: float, xs: Sequence[float], ys: Sequence[float]) -> float:
+    """Piecewise-linear interpolation with end clamping (the conservative
+    choice off-grid: never extrapolate a trend past the measured range)."""
+    order = np.argsort(xs)
+    xs = np.asarray(xs, np.float64)[order]
+    ys = np.asarray(ys, np.float64)[order]
+    return float(np.interp(x, xs, ys))
+
+
+@dataclasses.dataclass(frozen=True)
+class ThroughputModel:
+    """Seconds/iteration predictor over (touched points, devices, mode,
+    backend, compression), interpolated from measured bench points.
+
+    Interpolation contract (tested off-grid in ``tests/test_planner.py``):
+
+      · **N axis** — within one (mode, backend, compression, devices)
+        group, s/iter is piecewise-linear in touched points between the
+        measured sizes; below the smallest measurement it scales by the
+        smallest measurement's per-point rate (linear through the origin —
+        per-iteration dispatch overhead is not separable from one point,
+        so small-N walls are under-predicted; the validation tolerance
+        band owns that); above the largest it scales by the largest
+        measurement's per-point rate.
+      · **devices axis** — s/iter evaluated at each measured device count,
+        then piecewise-linear in log₂(devices), clamped at the grid ends.
+
+    A query with no measured points for its (mode, backend, compression)
+    triple falls back to the roofline table's per-op FLOP/s for that
+    backend when available, else raises :class:`PlanError` naming the
+    uncovered cell.
+    """
+    points: tuple[ThroughputPoint, ...]
+    roofline: tuple[dict, ...] = ()
+
+    @classmethod
+    def from_bench_dir(cls, bench_dir: str | None = None):
+        return cls(points=tuple(load_bench_points(bench_dir)),
+                   roofline=tuple(load_roofline_points(bench_dir)))
+
+    def _group(self, mode, backend, compression):
+        sel = [p for p in self.points
+               if p.mode == mode and p.backend == backend
+               and p.compression == compression]
+        if not sel and backend is None:
+            # the jnp sweep path has no dedicated full-mode bench; the
+            # "xla" kernel backend is the jitted reference implementation
+            # (same compiler, same arithmetic), so its points stand in
+            sel = [p for p in self.points
+                   if p.mode == mode and p.backend == "xla"
+                   and p.compression == compression]
+        if not sel and compression == "int8_ef":
+            # int8 coverage exists only for the jnp minibatch path today;
+            # other cells reuse the uncompressed measurement (the ring
+            # changes wire bytes, not flops — wall impact is advisory)
+            sel = [p for p in self.points
+                   if p.mode == mode and p.backend == backend
+                   and p.compression == "none"]
+        return sel
+
+    def _s_iter_at_devices(self, pts, touched):
+        by_dev: dict[int, list[float]] = {}
+        for p in pts:
+            if touched <= p.touched_points:
+                samples = sorted((q.touched_points, q.s_per_iter)
+                                 for q in pts if q.devices == p.devices)
+                xs = [0.0] + [s[0] for s in samples]
+                ys = [0.0] + [s[1] for s in samples]
+                val = _interp(touched, xs, ys)
+            else:
+                top = max((q for q in pts if q.devices == p.devices),
+                          key=lambda q: q.touched_points)
+                val = top.s_per_iter * touched / top.touched_points
+            by_dev.setdefault(p.devices, []).append(val)
+        return {d: float(np.mean(v)) for d, v in by_dev.items()}
+
+    def seconds_per_iter(self, touched_points: float, devices: int, *,
+                         mode: str, backend: str | None,
+                         compression: str = "none") -> float:
+        pts = self._group(mode, backend, compression)
+        if pts:
+            per_dev = self._s_iter_at_devices(pts, touched_points)
+            devs = sorted(per_dev)
+            return _interp(math.log2(max(devices, 1)),
+                           [math.log2(d) for d in devs],
+                           [per_dev[d] for d in devs])
+        return self._roofline_fallback(touched_points, devices, mode,
+                                       backend, compression)
+
+    def _roofline_fallback(self, touched, devices, mode, backend,
+                           compression):
+        rows = [r for r in self.roofline
+                if r["op"] == "kmeans_assign" and r["backend"] == backend]
+        if not rows:
+            raise PlanError(
+                f"no throughput coverage for (mode={mode!r}, "
+                f"backend={backend!r}, compression={compression!r}): not "
+                "measured in BENCH_minibatch_shard / BENCH_kernel_backends"
+                " / BENCH_sharded_overlap, and BENCH_roofline has no "
+                f"{backend!r} rows — run `python -m benchmarks.run --only "
+                "kernel_backends` (or benchmarks.roofline) on a host with "
+                "that backend")
+        # sweep FLOPs ≈ the assign op's per-point FLOP rate × touched
+        # points, at the backend's best achieved FLOP/s; device scaling is
+        # ideal-linear here (no measured collective overhead to interpolate)
+        best = max(rows, key=lambda r: r["achieved_flops_per_s"])
+        flops_per_point = best["flops"] / best["n"]
+        s = touched * flops_per_point / best["achieved_flops_per_s"]
+        return s / max(devices, 1)
+
+    def coverage(self) -> list[str]:
+        return sorted({f"{p.mode}/{p.backend or 'jnp'}/{p.compression}"
+                       f"@d{p.devices}" for p in self.points})
+
+
+# --------------------------------------------------------------------------
+# Candidate space + search
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlanSpec:
+    """What to provision for: problem size, accuracy target, deadline and
+    market, plus the engine knobs the search is allowed to move."""
+    n: int
+    d: int
+    k: int
+    target_r: float
+    deadline_s: float
+    prices: PriceTable
+    max_iters: int = 400
+    chunks: int = 64
+    batch_chunks: int = 16
+    decay: float = 0.95
+    patience: int = 3
+    device_grid: tuple = (1, 2, 4, 8)
+    modes: tuple = ("full", "minibatch")
+    compressions: tuple = ("none", "int8_ef")
+    prefetch_options: tuple = (False,)
+    backend: str | None = None          # kernel backend; None = jnp sweeps
+    # one-off h(r) training time, recorded for the Eq. 9 ledger; NOT added
+    # to per-task candidate costs (the paper amortises it over the task
+    # stream — §5.4 calls it negligible at fleet scale)
+    train_time_s: float = 0.0
+    restart_overhead_s: float = 60.0
+    checkpoint_interval_s: float | None = None
+
+    def __post_init__(self):
+        if not 0.0 < self.target_r <= 1.0:
+            raise ValueError(f"target_r must be in (0, 1], got "
+                             f"{self.target_r}")
+        if self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got "
+                             f"{self.deadline_s}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidatePlan:
+    """One priced point of the configuration space.  ``engine_kwargs()``
+    rebuilds the exact ``EngineConfig`` the prediction was made for."""
+    mode: str
+    devices: int
+    instance: str
+    pricing: str                    # "on_demand" | "spot"
+    backend: str | None
+    stats_compression: str
+    prefetch: bool
+    chunks: int
+    batch_chunks: int
+    decay: float
+    h_star: float
+    predicted_iters: int
+    predicted_wall_s: float         # raw predicted compute wall
+    billed_wall_s: float            # spot-inflated wall (deadline + Eq. 6)
+    predicted_cost_usd: float
+    feasible: bool
+    binding_constraint: str | None = None
+    at_noise_floor: bool = False    # h* ≤ the mode's h noise floor
+
+    def engine_kwargs(self) -> dict:
+        kw = dict(mode=self.mode, chunks=self.chunks,
+                  h_star=self.h_star,
+                  stats_compression=self.stats_compression,
+                  prefetch=self.prefetch)
+        if self.mode == "minibatch":
+            kw.update(batch_chunks=self.batch_chunks, decay=self.decay)
+        if self.backend is not None:
+            kw.update(use_kernel=True, kernel_backend=self.backend)
+        return kw
+
+    def describe(self) -> str:
+        bk = self.backend or "jnp"
+        return (f"{self.mode}/{bk}/d{self.devices}/{self.instance}/"
+                f"{self.pricing}"
+                + (f"/{self.stats_compression}"
+                   if self.stats_compression != "none" else "")
+                + ("/prefetch" if self.prefetch else ""))
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanReport:
+    """The planner's deliverable: the cheapest feasible candidate, the
+    runner-up table, and the full-convergence reference that turns the
+    paper's cost-fraction claim into a number for THIS problem."""
+    spec: dict                      # PlanSpec minus the price table object
+    h_star_by_mode: dict
+    chosen: CandidatePlan
+    candidates: tuple[CandidatePlan, ...]
+    full_reference: dict            # iters / wall_s / cost_usd / where
+    cost_fraction: float            # chosen cost / full-convergence cost
+
+    def to_json(self) -> str:
+        d = {
+            "spec": self.spec,
+            "h_star_by_mode": self.h_star_by_mode,
+            "chosen": dataclasses.asdict(self.chosen),
+            "candidates": [dataclasses.asdict(c) for c in self.candidates],
+            "full_reference": self.full_reference,
+            "cost_fraction": self.cost_fraction,
+        }
+        return json.dumps(d, indent=1)
+
+    @staticmethod
+    def from_json(s: str) -> "PlanReport":
+        d = json.loads(s)
+        return PlanReport(
+            spec=d["spec"], h_star_by_mode=d["h_star_by_mode"],
+            chosen=CandidatePlan(**d["chosen"]),
+            candidates=tuple(CandidatePlan(**c) for c in d["candidates"]),
+            full_reference=d["full_reference"],
+            cost_fraction=d["cost_fraction"])
+
+    def table(self, limit: int = 12) -> str:
+        """Human-readable runner-up table (the CLI prints this)."""
+        hdr = (f"{'candidate':44s} {'iters':>6s} {'wall_s':>9s} "
+               f"{'billed_s':>9s} {'cost_usd':>12s} feasible")
+        lines = [hdr, "-" * len(hdr)]
+        for c in self.candidates[:limit]:
+            mark = " <== chosen" if c == self.chosen else ""
+            lines.append(
+                f"{c.describe():44s} {c.predicted_iters:6d} "
+                f"{c.predicted_wall_s:9.3f} {c.billed_wall_s:9.3f} "
+                f"{c.predicted_cost_usd:12.8f} "
+                f"{'yes' if c.feasible else 'no ':3s}{mark}")
+        return "\n".join(lines)
+
+
+def _touched_points(spec: PlanSpec, mode: str) -> float:
+    """Points touched per iteration: N for a full sweep, 2·N·B/C for the
+    paired minibatch stop (the pairing's second pass is real compute)."""
+    if mode == "minibatch":
+        return 2.0 * spec.n * spec.batch_chunks / spec.chunks
+    return float(spec.n)
+
+
+def plan(spec: PlanSpec, *, models: dict, iteration_models: dict,
+         throughput: ThroughputModel) -> PlanReport:
+    """Search the candidate space and return the cheapest feasible plan.
+
+    ``models``: mode → fitted ``LongTailModel`` (h* = f(r*) per mode —
+    mode-matched, per ``BENCH_longtail_matched.json``'s case for never
+    transferring thresholds across regimes).  ``iteration_models``: mode →
+    :class:`IterationModel` fitted from the same harvest's h traces.
+    Raises :class:`PlanError` naming the binding constraint when no
+    candidate is feasible.
+    """
+    if len(spec.prices) == 0:
+        raise PlanError(
+            "price table is empty — nothing to provision; pass at least "
+            "one Price (CLI: --prices table.json, or omit --prices for "
+            "PriceTable.default())")
+    missing = [m for m in spec.modes
+               if m not in models or m not in iteration_models]
+    if missing:
+        raise PlanError(
+            f"no fitted h(r)/iteration model for mode(s) {missing} — "
+            "harvest and fit them first (repro.launch.plan does this "
+            "from the dataset groups)")
+
+    h_star_by_mode = {m: float(models[m].threshold_for(spec.target_r))
+                      for m in spec.modes}
+    candidates: list[CandidatePlan] = []
+    for mode in spec.modes:
+        im: IterationModel = iteration_models[mode]
+        h_star = h_star_by_mode[mode]
+        iters = im.iters_to(h_star, spec.max_iters, patience=spec.patience)
+        at_floor = h_star <= im.h_floor
+        touched = _touched_points(spec, mode)
+        comps = [c for c in spec.compressions
+                 if not (c == "int8_ef" and mode == "full")]
+        for devices in spec.device_grid:
+            for comp in comps:
+                if comp == "int8_ef" and devices < 2:
+                    continue        # a 1-device ring is the identity
+                for prefetch in spec.prefetch_options:
+                    s_iter = throughput.seconds_per_iter(
+                        touched, devices, mode=mode, backend=spec.backend,
+                        compression=comp)
+                    wall = iters * s_iter
+                    for price in spec.prices.prices:
+                        for pricing in price.pricings:
+                            billed = priced_wall_s(
+                                wall, price, devices, pricing,
+                                restart_overhead_s=spec.restart_overhead_s,
+                                checkpoint_interval_s=
+                                spec.checkpoint_interval_s)
+                            cost = candidate_cost_usd(
+                                wall, price, devices, pricing,
+                                restart_overhead_s=spec.restart_overhead_s,
+                                checkpoint_interval_s=
+                                spec.checkpoint_interval_s)
+                            feasible = billed <= spec.deadline_s
+                            candidates.append(CandidatePlan(
+                                mode=mode, devices=devices,
+                                instance=price.name, pricing=pricing,
+                                backend=spec.backend,
+                                stats_compression=comp, prefetch=prefetch,
+                                chunks=spec.chunks,
+                                batch_chunks=(spec.batch_chunks
+                                              if mode == "minibatch"
+                                              else 0),
+                                decay=(spec.decay if mode == "minibatch"
+                                       else 1.0),
+                                h_star=h_star, predicted_iters=iters,
+                                predicted_wall_s=wall,
+                                billed_wall_s=billed,
+                                predicted_cost_usd=cost,
+                                feasible=feasible,
+                                binding_constraint=(None if feasible
+                                                    else "deadline_s"),
+                                at_noise_floor=at_floor))
+
+    candidates.sort(key=lambda c: (not c.feasible, c.predicted_cost_usd))
+    feasible = [c for c in candidates if c.feasible]
+    if not feasible:
+        fastest = min(candidates, key=lambda c: c.billed_wall_s)
+        raise PlanError(
+            f"deadline_s={spec.deadline_s} is infeasible: the fastest "
+            f"candidate ({fastest.describe()}) still needs "
+            f"{fastest.billed_wall_s:.3f}s billed wall "
+            f"({fastest.predicted_iters} iters × "
+            f"{fastest.predicted_wall_s / fastest.predicted_iters:.4f}"
+            "s/iter) — the binding constraint is the deadline; raise it "
+            f"above {fastest.billed_wall_s:.3f}s or widen the search "
+            "space (devices/backends)")
+    chosen = feasible[0]
+
+    # the paper's cost-fraction denominator: the SAME placement (instance,
+    # devices, pricing) run full-batch to full convergence — the Time_full
+    # baseline of Eq. 10, here in predicted dollars
+    im_full: IterationModel = iteration_models.get(
+        "full", iteration_models[chosen.mode])
+    full_iters = im_full.n_full
+    full_s_iter = throughput.seconds_per_iter(
+        float(spec.n), chosen.devices, mode="full", backend=spec.backend,
+        compression="none")
+    full_wall = full_iters * full_s_iter
+    price = spec.prices.get(chosen.instance)
+    full_cost = candidate_cost_usd(
+        full_wall, price, chosen.devices, chosen.pricing,
+        restart_overhead_s=spec.restart_overhead_s,
+        checkpoint_interval_s=spec.checkpoint_interval_s)
+    full_reference = {
+        "iters": full_iters, "wall_s": full_wall, "cost_usd": full_cost,
+        "instance": chosen.instance, "devices": chosen.devices,
+        "pricing": chosen.pricing,
+    }
+
+    spec_d = dataclasses.asdict(spec)
+    spec_d["prices"] = [p.name for p in spec.prices.prices]
+    return PlanReport(
+        spec=spec_d, h_star_by_mode=h_star_by_mode, chosen=chosen,
+        candidates=tuple(candidates),
+        full_reference=full_reference,
+        cost_fraction=(chosen.predicted_cost_usd / full_cost
+                       if full_cost > 0 else float("inf")))
+
+
+def bench_files(bench_dir: str | None = None) -> list[str]:
+    """The committed BENCH_*.json artifacts visible to the planner."""
+    root = bench_dir or _repo_root()
+    return sorted(os.path.basename(p)
+                  for p in glob.glob(os.path.join(root, "BENCH_*.json")))
